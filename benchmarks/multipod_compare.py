@@ -1,0 +1,49 @@
+"""Multi-pod vs single-pod comparison (proof the pod axis shards).
+
+For every cell present on both meshes, reports per-device argument bytes
+(FSDP params should shrink going 256 -> 512 devices) and the cross-pod
+collective footprint. Emits CSV + a short markdown summary.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import load_cells
+from benchmarks.runlib import emit
+
+
+def run(markdown: bool = False):
+    single = {(c["arch"], c["shape"]): c for c in load_cells("singlepod")}
+    multi = {(c["arch"], c["shape"]): c for c in load_cells("multipod")}
+    rows = []
+    for key in sorted(single):
+        a, s = key
+        c1, c2 = single[key], multi.get(key)
+        if c2 is None or c1.get("status") != "ok" or c2.get("status") != "ok":
+            continue
+        r = {
+            "arch": a, "shape": s,
+            "arg_bytes_1pod": c1["argument_bytes_per_device"],
+            "arg_bytes_2pod": c2["argument_bytes_per_device"],
+            "arg_ratio": (c2["argument_bytes_per_device"]
+                          / max(1, c1["argument_bytes_per_device"])),
+            "peak_ratio": (c2["peak_bytes_per_device"]
+                           / max(1, c1["peak_bytes_per_device"])),
+        }
+        rows.append(r)
+        emit(f"multipod/{a}/{s}", 0.0,
+             f"arg_ratio={r['arg_ratio']:.2f};peak_ratio={r['peak_ratio']:.2f}")
+    if markdown and rows:
+        train = [r for r in rows if r["shape"] == "train_4k"]
+        print("\n| arch (train_4k) | args/dev 1-pod | args/dev 2-pod | ratio |")
+        print("|---|---|---|---|")
+        for r in train:
+            print(f"| {r['arch']} | {r['arg_bytes_1pod'] / 1e9:.2f} GB | "
+                  f"{r['arg_bytes_2pod'] / 1e9:.2f} GB | "
+                  f"{r['arg_ratio']:.2f} |")
+    return rows
+
+
+if __name__ == "__main__":
+    run(markdown=True)

@@ -1,0 +1,104 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb runner: lower one cell under a series of config variants
+and report the three roofline terms + peak memory for each.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch llama3-405b \
+      --shape train_4k --variants baseline,sqrt,sqrt_sp
+
+Each named variant is a config-override dict; results append to
+artifacts/perf/<arch>__<shape>.json so EXPERIMENTS.md §Perf can cite the
+full iteration log (hypothesis -> change -> before -> after).
+"""
+import argparse
+import json
+
+from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, analyze
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+
+VARIANTS = {
+    "baseline": {},
+    "remat_none": {"remat": "none"},
+    "remat_block": {"remat": "block"},
+    "remat_full": {"remat": "full"},
+    "sqrt": {"remat": "sqrt"},
+    "sp": {"sequence_parallel": True},
+    "sqrt_sp": {"remat": "sqrt", "sequence_parallel": True},
+    "full_sp": {"remat": "full", "sequence_parallel": True},
+    "fourier_mixer": {"mixer": "fourier", "attention": "none",
+                      "fourier_taps": 512},
+    "moe_group_2048": {"moe_group_size": 2048},
+    "moe_group_512": {"moe_group_size": 512},
+    "moe_cap_1": {"capacity_factor": 1.0},
+    "moe_bf16_dispatch": {"moe_dispatch_dtype": "bfloat16"},
+    "bf16_reduce": {"reduce_dtype": "bfloat16"},
+    "bf16_reduce_sqrt_sp": {"reduce_dtype": "bfloat16", "remat": "sqrt",
+                            "sequence_parallel": True},
+    "mixtral_best": {"reduce_dtype": "bfloat16", "remat": "sqrt",
+                     "sequence_parallel": True, "moe_group_size": 512,
+                     "grad_accum_steps": 4},
+    "llama_best": {"reduce_dtype": "bfloat16", "remat": "sqrt",
+                   "sequence_parallel": True, "grad_accum_steps": 8},
+    "moe_combo": {"moe_dispatch_dtype": "bfloat16", "moe_group_size": 512,
+                  "capacity_factor": 1.0, "sequence_parallel": True,
+                  "remat": "sqrt"},
+    "bf16_params": {"param_dtype": "bfloat16"},
+    "sqrt_sp_accum4": {"remat": "sqrt", "sequence_parallel": True,
+                       "grad_accum_steps": 4},
+    "sqrt_sp_accum8": {"remat": "sqrt", "sequence_parallel": True,
+                       "grad_accum_steps": 8},
+    "full_sp_accum4": {"remat": "full", "sequence_parallel": True,
+                       "grad_accum_steps": 4},
+}
+
+
+def run_variant(arch, shape, mesh, name) -> dict:
+    res = run_cell(arch, shape, mesh, verbose=False,
+                   overrides=VARIANTS[name])
+    a = analyze(res)
+    out = {"variant": name, "overrides": VARIANTS[name]}
+    if a is None:
+        out["status"] = res.get("status")
+        return out
+    out.update({k: a[k] for k in
+                ("t_compute_s", "t_memory_s", "t_collective_s", "dominant",
+                 "useful_flops_ratio", "peak_bytes_per_device", "hbm_ok")})
+    # keep raw collective mix for the analysis narrative
+    src = res.get("probe", res)
+    out["collective_bytes"] = src["collective_bytes"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    os.makedirs("artifacts/perf", exist_ok=True)
+    path = f"artifacts/perf/{args.arch}__{args.shape}.json"
+    log = []
+    if os.path.exists(path):
+        with open(path) as f:
+            log = json.load(f)
+    for name in args.variants.split(","):
+        r = run_variant(args.arch, args.shape, mesh, name)
+        log.append(r)
+        dom = r.get("dominant", "?")
+        print(f"[perf] {args.arch}/{args.shape} variant={name}: "
+              f"comp={r.get('t_compute_s', 0):.2e}s "
+              f"mem={r.get('t_memory_s', 0):.2e}s "
+              f"coll={r.get('t_collective_s', 0):.2e}s dom={dom} "
+              f"peak={r.get('peak_bytes_per_device', 0) / 1e9:.1f}GB "
+              f"useful={r.get('useful_flops_ratio', 0):.2f}")
+        with open(path, "w") as f:
+            json.dump(log, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

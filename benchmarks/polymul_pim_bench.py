@@ -1,0 +1,71 @@
+"""Paper Figure 6: polynomial multiplication, FourierPIM vs cuFFT-based GPU.
+
+(a, b): complex-coefficient polymul; (c, d): real-coefficient polymul with
+the Eq. (10) packing. Dimensions index the transform size (degree-n/2 inputs
+zero-padded to n, footnote 4) so both devices run identical transforms.
+CSV format matches fft_pim_bench.
+"""
+from __future__ import annotations
+
+from benchmarks.runlib import emit
+from repro.core.pim import (A100, FOURIERPIM_8, FOURIERPIM_40, FP16, FP32,
+                            RTX3070, complex_word_bits, gpu_model,
+                            polymul_energy_j_per_op, polymul_latency_cycles,
+                            polymul_throughput_per_s, with_partitions)
+from benchmarks.fft_pim_bench import DIMS, MAX_PARTITIONS
+
+
+def best_pim(n, base, spec, real):
+    word = complex_word_bits(spec)
+    best, best_p = None, 1
+    for p in (1, 2, 4):
+        if p > MAX_PARTITIONS:
+            continue
+        cfg = with_partitions(base, p)
+        if not cfg.valid_config(n, word):
+            continue
+        t = polymul_throughput_per_s(n, cfg, spec, real=real)
+        if best is None or t > best[0]:
+            best, best_p = (t, cfg), p
+    assert best is not None
+    return best[0], best[1], best_p
+
+
+def run() -> dict:
+    out = {}
+    for real, panel in ((False, "complex"), (True, "real")):
+        for prec, spec, wbytes in (("full", FP32, 8), ("half", FP16, 4)):
+            for n in DIMS:
+                thr8, cfg8, p8 = best_pim(n, FOURIERPIM_8, spec, real)
+                thr40, cfg40, p40 = best_pim(n, FOURIERPIM_40, spec, real)
+                g30 = gpu_model.polymul_throughput_per_s(n, RTX3070, wbytes,
+                                                         real=real)
+                ga = gpu_model.polymul_throughput_per_s(n, A100, wbytes,
+                                                        real=real)
+                e_pim = polymul_energy_j_per_op(n, cfg8, spec, real=real)
+                e30 = gpu_model.polymul_energy_j_per_op(n, RTX3070, wbytes,
+                                                        real=real)
+                ea = gpu_model.polymul_energy_j_per_op(n, A100, wbytes,
+                                                       real=real)
+                lat_us = (polymul_latency_cycles(n, cfg8, spec, real=real)
+                          / cfg8.clock_hz * 1e6)
+                emit(f"fig6/{panel}/{prec}/n={n}/FourierPIM-8(p{p8})", lat_us,
+                     f"throughput={thr8:.3e};energy_uj={e_pim * 1e6:.2f}")
+                emit(f"fig6/{panel}/{prec}/n={n}/RTX3070", 1e6 / g30,
+                     f"throughput={g30:.3e};energy_uj={e30 * 1e6:.2f}")
+                emit(f"fig6/{panel}/{prec}/n={n}/A100", 1e6 / ga,
+                     f"throughput={ga:.3e};energy_uj={ea * 1e6:.2f}")
+                ratios = {
+                    "thr8_vs_3070": thr8 / g30,
+                    "thr40_vs_A100": thr40 / ga,
+                    "energy_vs_3070": e30 / e_pim,
+                    "energy_vs_A100": ea / e_pim,
+                }
+                emit(f"fig6/{panel}/{prec}/n={n}/ratio", 0.0,
+                     ";".join(f"{k}={v:.2f}x" for k, v in ratios.items()))
+                out[(panel, prec, n)] = ratios
+    return out
+
+
+if __name__ == "__main__":
+    run()

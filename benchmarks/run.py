@@ -1,0 +1,30 @@
+"""Benchmark driver: one function per paper table/figure + the roofline.
+
+Emits ``name,us_per_call,derived`` CSV rows.
+
+  fig5/*      — paper Figure 5: batched FFT, FourierPIM vs cuFFT models
+  fig6/*      — paper Figure 6: complex & real polynomial multiplication
+  tpu_fft/*   — TPU-native kernel path (beyond-paper; wall-clock + roofline)
+  roofline/*  — per (arch x shape) three-term roofline from the dry-run
+                artifacts (skipped if artifacts/dryrun is absent)
+"""
+from __future__ import annotations
+
+import os
+
+
+def main() -> None:
+    from benchmarks import (fft_pim_bench, polymul_pim_bench, roofline,
+                            tpu_fft_bench)
+    print("name,us_per_call,derived")
+    fft_pim_bench.run()
+    polymul_pim_bench.run()
+    tpu_fft_bench.run()
+    if os.path.isdir(os.path.join("artifacts", "dryrun", "singlepod")):
+        roofline.run("singlepod")
+    else:
+        print("roofline/skipped,0,no artifacts (run repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main()

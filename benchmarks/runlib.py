@@ -1,0 +1,29 @@
+"""Shared benchmark helpers: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived carries
+the benchmark-specific figure of merit, e.g. a throughput ratio).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_jax(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time in microseconds for a jitted JAX callable."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

@@ -1,0 +1,63 @@
+"""TPU-native Fourier-core benchmark (beyond-paper §Perf evidence).
+
+Two parts:
+ 1. Wall-clock (CPU, XLA path) for the batched FFT / fused polymul at the
+    paper's dimensions — us_per_call CSV (structure check: O(n log n)).
+ 2. Structural HBM-pass accounting for the Pallas kernels: the VMEM-resident
+    kernel does exactly 1 read + 1 write of the operands per transform
+    (the paper's "in-memory" property), vs. log_r(n)-pass staged
+    implementations. Derived column reports the single-pass memory-bound
+    time on v5e (819 GB/s) — the roofline target the kernel is built to hit
+    — and the pass ratio vs. a staged baseline.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.runlib import emit, time_jax
+from repro.core import fft as F
+from repro.kernels.fft import plan_batch_block
+
+HBM_BW = 819e9
+DIMS = (2048, 4096, 8192, 16384)
+
+
+def hbm_passes_staged(n: int, radix_log2: int = 6) -> int:
+    import math
+    return max(1, math.ceil(math.log2(n) / radix_log2))
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for n in DIMS:
+        B = 256
+        x = jnp.asarray(rng.standard_normal((B, n))
+                        + 1j * rng.standard_normal((B, n)), jnp.complex64)
+        fft_fn = jax.jit(lambda v: F.fft(v, backend="xla"))
+        us = time_jax(fft_fn, x)
+        bytes_io = 2 * B * n * 8                       # one read + one write
+        t_roof = bytes_io / HBM_BW * 1e6               # us, single-pass bound
+        emit(f"tpu_fft/xla_cpu/n={n}/B={B}", us,
+             f"v5e_single_pass_us={t_roof:.1f};"
+             f"staged_passes={hbm_passes_staged(n)};our_passes=1;"
+             f"vmem_batch_block={plan_batch_block(n)}")
+
+        a = jnp.asarray(rng.standard_normal((B, n)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((B, n)), jnp.float32)
+        pm_fn = jax.jit(lambda u, v: F.polymul(u, v, mode="circular",
+                                               backend="xla"))
+        us_pm = time_jax(pm_fn, a, b)
+        # fused kernel: read a,b + write c = 3 arrays; unfused: 3 transforms
+        # x 2 passes + pointwise 3 arrays
+        fused_io = 3 * B * n * 4
+        unfused_io = (3 * 2 + 3) * B * n * 8
+        emit(f"tpu_polymul/xla_cpu/n={n}/B={B}", us_pm,
+             f"v5e_fused_us={fused_io / HBM_BW * 1e6:.1f};"
+             f"v5e_unfused_us={unfused_io / HBM_BW * 1e6:.1f};"
+             f"fusion_traffic_ratio={unfused_io / fused_io:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,13 @@
+"""Batched FFT service — the paper's workload as a serving system.
+
+Requests stream into a queue, are dynamically batched, and executed through
+the Fourier core. Run:  PYTHONPATH=src python examples/serve_fft.py
+"""
+from repro.launch import serve
+
+if __name__ == "__main__":
+    stats = serve.main([
+        "--service", "fft", "--op", "polymul",
+        "--n", "2048", "--batch", "64", "--requests", "512",
+    ])
+    assert stats["served"] == 512

@@ -1,0 +1,11 @@
+"""gemma3-4b [dense]: 34L d_model=2560 8H (GQA kv=4) d_ff=10240
+vocab=262144 — 5:1 local:global attention, 128k vocab x2 [gemma-3 family]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b", family="dense",
+    num_layers=34, d_model=2560, num_heads=8, num_kv_heads=4,
+    d_ff=10240, vocab_size=262144,
+    attention="local_global", local_global_ratio=5, window=1024,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,18 @@
+"""TPU-native Fourier ops (production path of the FourierPIM reproduction).
+
+Public surface:
+  fft / ifft / polymul / realpack_fft / fft_causal_conv   (kernels.ops)
+  fft_distributed / make_sharded_fft / make_sharded_polymul (four-step)
+  plan / FFTPlan                                           (planner)
+"""
+from repro.kernels.ops import (fft, fft_causal_conv, ifft, polymul,
+                               realpack_fft)
+from repro.core.fft.distributed import (fft_distributed, make_sharded_fft,
+                                        make_sharded_polymul)
+from repro.core.fft.planner import FFTPlan, plan
+
+__all__ = [
+    "fft", "ifft", "polymul", "realpack_fft", "fft_causal_conv",
+    "fft_distributed", "make_sharded_fft", "make_sharded_polymul",
+    "FFTPlan", "plan",
+]

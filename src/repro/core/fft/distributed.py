@@ -1,0 +1,176 @@
+"""Distributed four-step (Bailey) FFT across a mesh axis via shard_map.
+
+FourierPIM §7 leaves "multi-crossbar FFT" as future work: a transform whose
+sequence exceeds one array. This module is that extension on the TPU mesh:
+the sequence dimension is sharded across the ``model`` axis and the transform
+is computed as
+
+  n = n1 * n2,  x viewed as M[j1, j2] (row-major, j = j1*n2 + j2)
+  1. all-to-all transpose so each device owns all j1 for a j2 slice
+  2. local FFT_{n1} along j1                        -> Y[k1, j2]
+  3. twiddle multiply by omega_n^{j2 k1}            (local)
+  4. all-to-all transpose so each device owns all j2 for a k1 slice
+  5. local FFT_{n2} along j2                        -> Z[k1, k2]
+  X[k1 + k2*n1] = Z[k1, k2]
+
+With ``ordered=False`` the result stays in Z-order (k1-sharded): for
+convolution/polymul the pointwise product is order-agnostic as long as both
+operands share the order, and the inverse transform undoes it — saving one
+all-to-all per transform in each direction. This mirrors the paper's
+cancellation of the FFT/IFFT input permutations across DFT.IDFT (§5), lifted
+to the collective level.
+
+All collectives are `jax.lax.all_to_all(tiled=True)` inside `shard_map`, so
+the dry-run HLO shows real all-to-all ops whose bytes the roofline
+accounting measures.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops as kops
+
+
+def _local_fft(x: jax.Array, *, inverse: bool, backend: str | None) -> jax.Array:
+    return kops.fft(x, inverse=inverse, backend=backend)
+
+
+def _twiddle(n: int, n1: int, n2: int, j2_start: int, j2_len: int,
+             inverse: bool) -> jax.Array:
+    """omega_n^{j2 k1} block for local j2 slice; shape (n1, j2_len)."""
+    k1 = jnp.arange(n1, dtype=jnp.float32)[:, None]
+    j2 = (j2_start + jnp.arange(j2_len, dtype=jnp.float32))[None, :]
+    sign = 1.0 if inverse else -1.0
+    ang = sign * 2.0 * jnp.pi * (k1 * j2) / n
+    return jnp.cos(ang) + 1j * jnp.sin(ang)
+
+
+def fft_distributed(x: jax.Array, *, axis_name: str = "model",
+                    n_devices: int, inverse: bool = False,
+                    ordered: bool = True, backend: str | None = None,
+                    _in_zorder: bool = False) -> jax.Array:
+    """FFT of (..., n) with the last axis sharded over ``axis_name``.
+
+    Must be called INSIDE shard_map: ``x`` is the per-device local block
+    (..., n / D). n1 = D * ceil-pow2 rows, n2 = n / n1 — we pick n1 = D so
+    each all-to-all moves exactly one tile per peer and local FFT lengths
+    stay balanced (planner may override by reshaping beforehand).
+    """
+    D = n_devices
+    *lead, n_loc = x.shape
+    n = n_loc * D
+    n1, n2 = D, n_loc
+    idx = jax.lax.axis_index(axis_name)
+    x = x.astype(jnp.complex64)
+
+    if not inverse:
+        # Local block is M[j1 in my chunk, j2 all] = (n1/D=1 rows of j1 ... )
+        # With n1 = D each device holds exactly one j1 row: (..., 1, n2).
+        m = x.reshape(*lead, 1, n2)
+        # Step 1: transpose -> each device owns all j1 for a j2 slice.
+        m = jax.lax.all_to_all(m, axis_name, split_axis=len(lead) + 1,
+                               concat_axis=len(lead), tiled=True)
+        # Now (..., n1, n2/D); axis -2 is full j1.
+        y = _local_fft(jnp.swapaxes(m, -1, -2), inverse=False, backend=backend)
+        y = jnp.swapaxes(y, -1, -2)  # (..., n1=k1, n2/D)
+        tw = _twiddle(n, n1, n2, 0, n2 // D, inverse)
+        # global j2 = idx * (n2/D) + local: omega^{k1 * j2} =
+        # omega^{k1 * local} * omega^{k1 * idx * n2/D}
+        k1 = jnp.arange(n1, dtype=jnp.float32)
+        ang = (1.0 if inverse else -1.0) * 2.0 * jnp.pi * k1 * (
+            idx.astype(jnp.float32) * (n2 // D)) / n
+        phase = (jnp.cos(ang) + 1j * jnp.sin(ang))[:, None]
+        y = y * (tw * phase)
+        # Step 4: transpose -> each device owns all j2 for a k1 slice.
+        y = jax.lax.all_to_all(y, axis_name, split_axis=len(lead),
+                               concat_axis=len(lead) + 1, tiled=True)
+        # (..., n1/D=1? no: split k1 (axis -2) across D, concat j2: (..., 1, n2))
+        z = _local_fft(y.reshape(*lead, n2), inverse=False, backend=backend)
+        z = z.reshape(*lead, 1, n2)
+        if not ordered:
+            return z.reshape(*lead, n_loc)  # Z-order: k1-sharded, k2 local
+        # Step 7: Z[k1, k2] -> natural order X[k1 + k2 n1], outer digit k2
+        # sharded: transpose once more.
+        z = jax.lax.all_to_all(z, axis_name, split_axis=len(lead) + 1,
+                               concat_axis=len(lead), tiled=True)
+        # (..., D, n2/D) rows k1 full? After split of k2-axis: each device has
+        # Z[k1 all? ...]. Layout: (..., n1, n2/D) with j2 slice owned.
+        z = jnp.swapaxes(z, -1, -2)  # (..., n2/D, n1): [k2_local, k1]
+        return z.reshape(*lead, n_loc)
+    else:
+        # Inverse of the above; input in Z-order if _in_zorder else natural.
+        if not _in_zorder:
+            # natural X sharded by outer k2 chunk: (..., n2/D, n1) view
+            z = x.reshape(*lead, n2 // D, n1)
+            z = jnp.swapaxes(z, -1, -2)  # (..., n1, n2/D)
+            z = jax.lax.all_to_all(z, axis_name, split_axis=len(lead),
+                                   concat_axis=len(lead) + 1, tiled=True)
+            # (..., 1, n2): one k1 row, all k2
+            z = z.reshape(*lead, n2)
+        else:
+            z = x
+        # Undo step 5: inverse local FFT over k2.
+        y = _local_fft(z, inverse=True, backend=backend)
+        y = y.reshape(*lead, 1, n2)
+        # Undo step 4.
+        y = jax.lax.all_to_all(y, axis_name, split_axis=len(lead) + 1,
+                               concat_axis=len(lead), tiled=True)
+        # (..., n1, n2/D): all k1 for a j2 slice. Undo twiddle (conjugate).
+        tw = _twiddle(n, n1, n2, 0, n2 // D, inverse=True)
+        k1 = jnp.arange(n1, dtype=jnp.float32)
+        ang = 2.0 * jnp.pi * k1 * (idx.astype(jnp.float32) * (n2 // D)) / n
+        phase = (jnp.cos(ang) + 1j * jnp.sin(ang))[:, None]
+        y = y * (tw * phase)
+        # Undo step 2: inverse local FFT over j1 (axis -2).
+        m = _local_fft(jnp.swapaxes(y, -1, -2), inverse=True, backend=backend)
+        m = jnp.swapaxes(m, -1, -2)
+        # Undo step 1 transpose.
+        m = jax.lax.all_to_all(m, axis_name, split_axis=len(lead),
+                               concat_axis=len(lead) + 1, tiled=True)
+        return m.reshape(*lead, n_loc)
+
+
+def make_sharded_fft(mesh: jax.sharding.Mesh, *, axis_name: str = "model",
+                     batch_axes: Sequence[str] = ("data",),
+                     inverse: bool = False, ordered: bool = True,
+                     backend: str | None = None):
+    """Build a jit-able distributed FFT over ``mesh``: (B, n) -> (B, n).
+
+    Batch is sharded over ``batch_axes``; the transform dimension over
+    ``axis_name``.
+    """
+    D = mesh.shape[axis_name]
+    spec = P(tuple(batch_axes), axis_name)
+
+    fn = functools.partial(fft_distributed, axis_name=axis_name, n_devices=D,
+                           inverse=inverse, ordered=ordered, backend=backend)
+    return shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                     check_vma=False)
+
+
+def make_sharded_polymul(mesh: jax.sharding.Mesh, *, axis_name: str = "model",
+                         batch_axes: Sequence[str] = ("data",),
+                         backend: str | None = None):
+    """Distributed circular polymul: both transforms stay in Z-order, the
+    pointwise product is local, and the final inverse restores natural order.
+    Saves 2 all-to-alls per call vs. composing ordered transforms."""
+    D = mesh.shape[axis_name]
+    spec = P(tuple(batch_axes), axis_name)
+
+    def local_fn(a, b):
+        fa = fft_distributed(a, axis_name=axis_name, n_devices=D,
+                             ordered=False, backend=backend)
+        fb = fft_distributed(b, axis_name=axis_name, n_devices=D,
+                             ordered=False, backend=backend)
+        prod = fa * fb
+        return fft_distributed(prod, axis_name=axis_name, n_devices=D,
+                               inverse=True, _in_zorder=True, backend=backend)
+
+    return shard_map(local_fn, mesh=mesh, in_specs=(spec, spec),
+                     out_specs=spec, check_vma=False)

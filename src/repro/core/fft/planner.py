@@ -1,0 +1,47 @@
+"""Kernel/distribution planner for Fourier ops.
+
+Given (batch, n, mesh) decide:
+  * execution tier: single-device Pallas kernel (batch-sharded) vs.
+    distributed four-step FFT (sequence-sharded over the model axis);
+  * kernel config: radix (2 or 4), batch block (VMEM budget).
+
+The decision mirrors the paper's configuration ladder (§4.3-4.5): the
+r/2r-configurations are "fits in one array" (-> our single-kernel tier, batch
+across crossbars ↔ batch across devices), the 2r-beta configuration is
+"sequence spans multiple column units" (-> our four-step tier across devices,
+with the all-to-all playing the role of the inter-unit column swaps).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.fft import VMEM_BUDGET_BYTES, plan_batch_block
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTPlan:
+    tier: str           # "local" | "distributed"
+    radix: int          # 2 or 4
+    block_b: int        # batch block per kernel invocation (local tier)
+    seq_shards: int     # model-axis shards of the sequence (distributed tier)
+
+    def describe(self) -> str:
+        if self.tier == "local":
+            return (f"local Pallas kernel, radix-{self.radix}, "
+                    f"batch block {self.block_b} (VMEM-resident)")
+        return (f"four-step distributed FFT over {self.seq_shards} devices, "
+                f"radix-{self.radix} local stages")
+
+
+# A single sequence must keep ~2 fp32 planes x live factor in VMEM.
+_MAX_LOCAL_N = VMEM_BUDGET_BYTES // (2 * 4 * 4)   # = 256K points
+
+
+def plan(n: int, batch: int, *, model_shards: int = 1) -> FFTPlan:
+    assert n & (n - 1) == 0, f"n={n} must be a power of two"
+    radix = 4 if (n.bit_length() - 1) >= 2 else 2
+    if n <= _MAX_LOCAL_N or model_shards == 1:
+        return FFTPlan(tier="local", radix=radix,
+                       block_b=plan_batch_block(n), seq_shards=1)
+    return FFTPlan(tier="distributed", radix=radix, block_b=1,
+                   seq_shards=model_shards)

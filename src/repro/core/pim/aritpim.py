@@ -1,0 +1,130 @@
+"""AritPIM-style cost model: cycles & gate counts for element-parallel
+bit-serial arithmetic on a memristive crossbar (paper §2.2, [12]).
+
+The paper adopts AritPIM's algorithms verbatim; we reproduce their cost
+structure as closed forms in the bit widths. One stateful logic gate (MAGIC
+NOR) executes per cycle per row, in parallel across all rows of a crossbar
+(and across all crossbars), so
+
+    latency_cycles  = gate sequence length          (per vectored op)
+    gates_executed  = cycles * active_rows          (per crossbar)
+    energy          = gates_executed * gate_energy
+
+Gate-sequence lengths (documented derivations; constants are the knobs the
+reproduction calibrates, see EXPERIMENTS.md §Repro-calibration):
+
+  fixed add (N bits)      9N + 1        MAGIC full-adder: 9 NOR/bit, serial carry
+  fixed mul (N bits)      12N^2 + 3N    shift-and-add: N partial products,
+                                        each AND row (3 gates/bit) + add
+  copy (N bits)           2N            double-NOT per bit
+  swap (N bits)           3N            three NOT-copies via a temp column
+  float add (E, M)        2*barrel + 9(M+4) + 9E + 9M + 2M
+                          barrel = 3 (M+2) ceil(log2 (M+2))   (align + renorm)
+  float mul (E, M)        12 (M+1)^2 + 9E + 3M + 9M           (mantissa product
+                          dominates; exponent add, normalize, round)
+
+Complex arithmetic (paper §4.1, rectangular form):
+  cadd = 2 float adds;  cmul = 4 float muls + 2 float adds (Eq. (8)).
+Butterfly (paper §4.2): u +- w v = 1 cmul + 2 cadd = 4 fmul + 6 fadd.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatSpec:
+    """IEEE-style float layout used for each real component."""
+    exp_bits: int
+    man_bits: int
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+
+FP32 = FloatSpec(exp_bits=8, man_bits=23)
+FP16 = FloatSpec(exp_bits=5, man_bits=10)
+
+#: paper §6: full precision complex = 2 x fp32, half = 2 x fp16
+SPEC_BY_PRECISION = {"full": FP32, "half": FP16}
+
+
+def fixed_add_cycles(n_bits: int) -> int:
+    return 9 * n_bits + 1
+
+
+def fixed_mul_cycles(n_bits: int) -> int:
+    return 12 * n_bits * n_bits + 3 * n_bits
+
+
+def copy_cycles(n_bits: int) -> int:
+    return 2 * n_bits
+
+
+def swap_cycles(n_bits: int) -> int:
+    return 3 * n_bits
+
+
+def _barrel_shift_cycles(m: int) -> int:
+    return 3 * m * max(1, math.ceil(math.log2(max(2, m))))
+
+
+#: Width-independent gate-sequence overhead per float op: IEEE special-case
+#: handling (NaN/inf/subnormal/zero detection, sign logic, exponent
+#: saturation) that AritPIM's sequences carry regardless of mantissa width.
+#: This term is why half precision does not speed PIM up by the full
+#: quadratic mantissa factor (observable in the paper's half/full ratios).
+FLOAT_FIXED_OVERHEAD = 350
+
+
+def float_add_cycles(spec: FloatSpec) -> int:
+    m, e = spec.man_bits, spec.exp_bits
+    barrel = _barrel_shift_cycles(m + 2)
+    return (2 * barrel            # align + renormalize shifts
+            + 9 * (m + 4)         # mantissa add (guard/round/sticky bits)
+            + 9 * e               # exponent difference / adjust
+            + 9 * m               # rounding add
+            + 2 * m               # pack/copy
+            + FLOAT_FIXED_OVERHEAD)
+
+
+def float_mul_cycles(spec: FloatSpec) -> int:
+    m, e = spec.man_bits, spec.exp_bits
+    return (12 * (m + 1) ** 2     # mantissa partial-product accumulation
+            + 9 * e               # exponent add
+            + 3 * m               # normalize (1-bit shift + sticky)
+            + 9 * m               # rounding add
+            + FLOAT_FIXED_OVERHEAD)
+
+
+def complex_add_cycles(spec: FloatSpec) -> int:
+    return 2 * float_add_cycles(spec)
+
+
+def complex_mul_cycles(spec: FloatSpec) -> int:
+    """(a+bi)(a'+b'i) per Eq. (8): 4 real muls + 2 real adds."""
+    return 4 * float_mul_cycles(spec) + 2 * float_add_cycles(spec)
+
+
+def butterfly_cycles(spec: FloatSpec) -> int:
+    """In-place vectored butterfly (u, v) -> (u + w v, u - w v), §4.2."""
+    return complex_mul_cycles(spec) + 2 * complex_add_cycles(spec)
+
+
+def complex_word_bits(spec: FloatSpec) -> int:
+    return 2 * spec.total_bits
+
+
+# Convenience table used by benchmarks / tests.
+def op_cycles(op: str, spec: FloatSpec) -> int:
+    return {
+        "fadd": float_add_cycles(spec),
+        "fmul": float_mul_cycles(spec),
+        "cadd": complex_add_cycles(spec),
+        "cmul": complex_mul_cycles(spec),
+        "butterfly": butterfly_cycles(spec),
+        "copy": copy_cycles(complex_word_bits(spec)),
+        "swap": swap_cycles(complex_word_bits(spec)),
+    }[op]

@@ -1,0 +1,99 @@
+"""Logical (value-level) crossbar simulator with cycle/energy counters.
+
+The paper verifies FourierPIM on a cycle-accurate simulator that "logically
+models a memristive crossbar array and performs the sequence of operations
+that correspond to the proposed algorithms" (§6). This module is that
+simulator, reproduced at the same abstraction level:
+
+  * values are tracked numerically (a crossbar is an (rows, word-slots)
+    complex array) — correctness of the FFT/polymul mapping is checked
+    against ``numpy.fft`` on random inputs, exactly like the paper checks
+    against baseline implementations;
+  * every vectored operation charges latency cycles and gate executions per
+    the AritPIM cost model (aritpim.py), which drive the throughput/energy
+    numbers in the benchmarks;
+  * the bit-level gate sequences themselves are NOT re-simulated per value —
+    they are memristor-circuit facts imported as costs (their own validation
+    is AritPIM's [12]); a narrow bit-exact NOR-adder check lives in
+    tests/test_pim.py to pin the cost model's structural assumptions.
+
+Cost conventions (see DESIGN.md §PIM):
+  column op  (bitline voltages): 1 gate/row/cycle, all rows in parallel.
+  row op     (wordline voltages): whole row in 1 gate-step/cycle, rows serial.
+  partitions: p independent column-units may fire gates concurrently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.pim import aritpim
+from repro.core.pim.device_model import PIMConfig
+
+
+@dataclasses.dataclass
+class Counters:
+    cycles: int = 0
+    gates: int = 0
+
+    def energy_j(self, cfg: PIMConfig) -> float:
+        return self.gates * cfg.gate_energy_j
+
+    def latency_s(self, cfg: PIMConfig) -> float:
+        return self.cycles / cfg.clock_hz
+
+
+class CrossbarSim:
+    """One crossbar: (rows x word-slot) complex values + cost counters."""
+
+    def __init__(self, cfg: PIMConfig, spec: aritpim.FloatSpec):
+        self.cfg = cfg
+        self.spec = spec
+        self.word_bits = aritpim.complex_word_bits(spec)
+        self.slots = cfg.crossbar_cols // self.word_bits
+        self.values = np.zeros((cfg.crossbar_rows, self.slots), np.complex128)
+        self.ctr = Counters()
+
+    # -- cost charging ------------------------------------------------------
+    def charge_column_op(self, op: str, active_rows: int, serial: int = 1):
+        c = aritpim.op_cycles(op, self.spec) * serial
+        self.ctr.cycles += c
+        self.ctr.gates += c * active_rows
+
+    def charge_row_ops(self, n_rows: int, cycles_per_row: int = 2):
+        """Serial row-granularity moves (copy=2 NOT cycles, swap=6)."""
+        self.ctr.cycles += n_rows * cycles_per_row
+        self.ctr.gates += n_rows * cycles_per_row * self.word_bits
+
+    def charge_twiddle_writes(self, n_values: int):
+        """Constants written by the periphery (paper footnote 3): one row
+        write per value, parallel across crossbars, negligible energy."""
+        self.ctr.cycles += n_values
+        self.ctr.gates += n_values * self.word_bits
+
+    # -- value-level ops (verified numerically) -----------------------------
+    def load(self, x: np.ndarray, slot0: int = 0):
+        """Store a sequence into slots (snake over rows within each slot
+        pair); no cost — DMA into memory is outside the kernel, as in the
+        paper's batched setup."""
+        r = self.cfg.crossbar_rows
+        x = np.asarray(x, np.complex128)
+        cols = math.ceil(len(x) / r)
+        assert slot0 + cols <= self.slots, "sequence does not fit"
+        for c in range(cols):
+            chunk = x[c * r:(c + 1) * r]
+            self.values[:len(chunk), slot0 + c] = chunk
+        return cols
+
+    def butterfly_rows(self, u: np.ndarray, v: np.ndarray, w: np.ndarray,
+                       active_rows: int, serial_units: int = 1):
+        """Vectored in-place butterfly on value vectors (u,v,w aligned rows).
+
+        Returns (u + w v, u - w v); charges one butterfly per serial unit
+        group (paper §4.2: O(1) vector ops regardless of row count).
+        """
+        t = w * v
+        self.charge_column_op("butterfly", active_rows, serial=serial_units)
+        return u + t, u - t

@@ -1,0 +1,238 @@
+"""In-memory FFT algorithms (paper §4): r-, 2r-, and 2r-beta configurations.
+
+Each algorithm runs on the logical crossbar simulator: the butterfly values
+are computed numerically (and checked against numpy.fft in the tests) while
+cycle/gate counters accumulate per the AritPIM cost model. Closed-form
+latency/energy expressions — used by the large-n benchmarks — are derived
+from the same per-group structure and asserted equal to the simulator's
+counters in tests/test_pim.py.
+
+Structural model per group g (of log2 n groups), following §4.3-4.5:
+
+  r-FFT   (n = r):   align half the sequence (1 column-parallel word copy +
+                     r/2 serial row copies), butterfly on r/2 rows, move back.
+  2r-FFT  (n = 2r):  butterfly on all r rows (full utilization); transition =
+                     one in-place pair swap: within-row (column-parallel,
+                     3N cycles) when the partner shares the row, otherwise
+                     r/2 serial row swaps.
+  2rb-FFT (n = 2rb): beta column-units execute the group's butterflies
+                     serially (ceil(beta/p) with p partitions [25]); unit
+                     transitions add column-parallel copies between units.
+
+Twiddle constants are written by the periphery each group (footnote 3),
+charged as r/2 row writes.
+
+The input bit-reversal permutation is charged as serial row swaps for FFT
+(and skipped for polymul where the permutations cancel, §5) — with Stockham
+there is no analogue; this is the memristive layout's own cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.pim import aritpim
+from repro.core.pim.crossbar import Counters, CrossbarSim
+from repro.core.pim.device_model import PIMConfig
+
+
+def _bit_reverse_perm(n: int) -> np.ndarray:
+    bits = n.bit_length() - 1
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int64)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+def _perm_swap_count(n: int) -> int:
+    """Number of 2-cycles in the bit-reversal permutation."""
+    rev = _bit_reverse_perm(n)
+    return int(np.sum(rev > np.arange(n)))
+
+
+@dataclasses.dataclass(frozen=True)
+class PIMFFTResult:
+    output: np.ndarray
+    counters: Counters
+
+
+def _twiddles(n: int, inverse: bool) -> np.ndarray:
+    sign = 1.0 if inverse else -1.0
+    return np.exp(sign * 2j * np.pi * np.arange(n // 2) / n)
+
+
+def _fft_groups(sim: CrossbarSim, x: np.ndarray, *, inverse: bool,
+                serial_units: int, active_rows: int,
+                transition_fn) -> np.ndarray:
+    """Shared group loop: iterative DIT butterflies after bit reversal.
+
+    ``transition_fn(stage)`` charges the inter-group data movement of the
+    specific configuration. Butterfly values verified numerically.
+    """
+    n = len(x)
+    stages = n.bit_length() - 1
+    y = x[_bit_reverse_perm(n)].astype(np.complex128)
+    for s in range(stages):
+        m = 2 << s            # butterfly span
+        half = m >> 1
+        # gather pairs (j, j + half) within blocks of m
+        idx = np.arange(n).reshape(n // m, m)
+        top = idx[:, :half].ravel()
+        bot = idx[:, half:].ravel()
+        w = np.tile(_twiddles(m, inverse), n // m)
+        sim.charge_twiddle_writes(sim.cfg.crossbar_rows // 2)
+        transition_fn(s)
+        u, v = sim.butterfly_rows(y[top], y[bot], w, active_rows,
+                                  serial_units=serial_units)
+        y[top], y[bot] = u, v
+    if inverse:
+        # 1/n scaling: exponent decrement per element (paper §5 trick) —
+        # column-parallel copy-scale, one word op.
+        sim.charge_column_op("copy", active_rows)
+        y = y / n
+    return y
+
+
+def r_fft(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
+          *, inverse: bool = False, charge_perm: bool = True) -> PIMFFTResult:
+    """r-configuration (§4.3): n = crossbar rows, one element per row."""
+    n = len(x)
+    assert n == cfg.crossbar_rows, f"r-FFT needs n == rows ({cfg.crossbar_rows})"
+    sim = CrossbarSim(cfg, spec)
+    sim.load(x)
+    if charge_perm:
+        sim.charge_row_ops(_perm_swap_count(n), cycles_per_row=6)
+
+    def transition(stage):
+        # shift half right (column-parallel word copy) + r/2 rows up, then
+        # back after the butterfly: 2x.
+        sim.charge_column_op("copy", n // 2)
+        sim.charge_row_ops(n // 2, cycles_per_row=2)
+        sim.charge_column_op("copy", n // 2)
+        sim.charge_row_ops(n // 2, cycles_per_row=2)
+
+    y = _fft_groups(sim, x, inverse=inverse, serial_units=1,
+                    active_rows=n // 2, transition_fn=transition)
+    return PIMFFTResult(output=y, counters=sim.ctr)
+
+
+def fft_2r(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
+           *, inverse: bool = False, charge_perm: bool = True) -> PIMFFTResult:
+    """2r-configuration (§4.4): two elements per row (snake), full-row use."""
+    n = len(x)
+    r = cfg.crossbar_rows
+    assert n == 2 * r, f"2r-FFT needs n == 2*rows ({2 * r})"
+    sim = CrossbarSim(cfg, spec)
+    sim.load(x)
+    if charge_perm:
+        sim.charge_row_ops(_perm_swap_count(n), cycles_per_row=6)
+
+    def transition(stage):
+        if stage == 0:
+            return  # snake layout already pairs stage-0 partners in-row
+        # in-place pair swap (Fig. 4d): one column-parallel word swap plus
+        # r/2 serial row swaps for the cross-row half of the pairs.
+        sim.charge_column_op("swap", r)
+        sim.charge_row_ops(r // 2, cycles_per_row=6)
+
+    y = _fft_groups(sim, x, inverse=inverse, serial_units=1,
+                    active_rows=r, transition_fn=transition)
+    return PIMFFTResult(output=y, counters=sim.ctr)
+
+
+def fft_2rbeta(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
+               *, inverse: bool = False,
+               charge_perm: bool = True) -> PIMFFTResult:
+    """2r-beta configuration (§4.5): 2*beta elements per row across beta
+    column-units; butterflies serial over units, ceil(beta/p) with
+    partitions [25]."""
+    n = len(x)
+    r = cfg.crossbar_rows
+    beta = n // (2 * r)
+    assert n == 2 * r * beta and beta >= 1, f"n={n} not a 2r*beta multiple"
+    word = aritpim.complex_word_bits(spec)
+    need = cfg.crossbars_per_fft(n, word)
+    assert need <= 1.0 + 1e-9 or beta <= cfg.crossbar_cols // (2 * word), \
+        f"n={n} exceeds crossbar width (footnote 7)"
+    sim = CrossbarSim(cfg, spec)
+    serial = math.ceil(beta / cfg.partitions)
+
+    def transition(stage):
+        if stage == 0:
+            return
+        sim.charge_column_op("swap", r)          # within-row pair swaps
+        sim.charge_row_ops(r // 2, cycles_per_row=6)  # cross-row half
+        if stage >= int(math.log2(2 * r)):
+            # pairs now span units: column-parallel inter-unit word copies,
+            # serialized over units (partitions parallelize them too).
+            sim.charge_column_op("copy", r,
+                                 serial=math.ceil(beta / cfg.partitions))
+
+    y = _fft_groups(sim, x, inverse=inverse, serial_units=serial,
+                    active_rows=r, transition_fn=transition)
+    if charge_perm:
+        sim.charge_row_ops(_perm_swap_count(min(n, 2 * r)), cycles_per_row=6)
+    return PIMFFTResult(output=y, counters=sim.ctr)
+
+
+def pim_fft(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
+            *, inverse: bool = False, charge_perm: bool = True
+            ) -> PIMFFTResult:
+    """Dispatch to the layout the paper uses for this n (§6: 2K..16K -> 2r,
+    2r*2, 2r*4, 2r*8)."""
+    n = len(x)
+    r = cfg.crossbar_rows
+    if n == r:
+        return r_fft(x, cfg, spec, inverse=inverse, charge_perm=charge_perm)
+    return fft_2rbeta(x, cfg, spec, inverse=inverse, charge_perm=charge_perm)
+
+
+# ---------------------------------------------------------------------------
+# Closed forms (benchmarks at scale; asserted == simulator in tests)
+# ---------------------------------------------------------------------------
+
+def fft_latency_cycles(n: int, cfg: PIMConfig, spec: aritpim.FloatSpec,
+                       *, charge_perm: bool = True,
+                       inverse: bool = False) -> int:
+    r = cfg.crossbar_rows
+    beta = max(1, n // (2 * r))
+    stages = n.bit_length() - 1
+    bfly = aritpim.butterfly_cycles(spec)
+    word = aritpim.complex_word_bits(spec)
+    serial = math.ceil(beta / cfg.partitions)
+    total = 0
+    if charge_perm:
+        total += _perm_swap_count(min(n, 2 * r)) * 6
+    for s in range(stages):
+        total += r // 2                     # twiddle writes
+        total += bfly * serial              # butterflies
+        if n == r:                          # r-config moves
+            total += 2 * aritpim.copy_cycles(word) + 2 * (n // 2) * 2
+        elif s > 0:                         # 2r / 2rb transitions
+            total += aritpim.swap_cycles(word) + (r // 2) * 6
+            if n > 2 * r and s >= int(math.log2(2 * r)):
+                total += aritpim.copy_cycles(word) * serial
+    if inverse:
+        total += aritpim.copy_cycles(word)  # 1/n exponent-decrement pass
+    return total
+
+
+def fft_throughput_per_s(n: int, cfg: PIMConfig, spec: aritpim.FloatSpec
+                         ) -> float:
+    """Batched throughput: all crossbars run the same schedule in parallel
+    (paper: batch size = number of crossbars, net of scratch area)."""
+    word = aritpim.complex_word_bits(spec)
+    lat = fft_latency_cycles(n, cfg, spec) / cfg.clock_hz
+    return cfg.batch_capacity(n, word) * cfg.concurrency / lat
+
+
+def fft_energy_j_per_op(n: int, cfg: PIMConfig, spec: aritpim.FloatSpec
+                        ) -> float:
+    """Energy per FFT: gate executions dominate; derived from the simulator
+    counter structure (gates ~= cycles * active rows for column ops)."""
+    x = np.random.default_rng(0).standard_normal(n).astype(np.complex128)
+    res = pim_fft(x, cfg, spec)
+    return res.counters.energy_j(cfg)

@@ -1,0 +1,143 @@
+"""In-memory polynomial multiplication (paper §5) on the crossbar simulator.
+
+Pipeline (convolution theorem, Eq. (9)):
+  (1) FFT of each polynomial's coefficients — WITHOUT the input bit-reversal
+      permutations: across DFT.IDFT they cancel (paper §5), so neither the
+      forward nor the inverse transform charges them;
+  (2) element-wise complex product — one vectored cmul, serial over the
+      beta column-units (ceil(beta/p) with partitions);
+  (3) inverse FFT with the 1/n scaling absorbed as an exponent decrement.
+
+Real-coefficient variant (Eq. (10)): both forward transforms fold into ONE
+complex FFT of z = a + i b; the unpack uses the paper's in-memory tricks —
+conjugate = imag sign-bit flip, multiply-by-i = plane swap + sign flip,
+divide-by-2 = exponent decrement, Z_{n-k} = order reversal via swaps. Area
+also halves (one packed sequence instead of two), which doubles the batch —
+both effects feed the paper's observation that real-polymul ratios beat the
+FFT ratios.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.pim import aritpim
+from repro.core.pim.crossbar import Counters, CrossbarSim
+from repro.core.pim.device_model import PIMConfig
+from repro.core.pim.fft_pim import (PIMFFTResult, fft_latency_cycles,
+                                    pim_fft)
+
+
+def _unpack_cycles(cfg: PIMConfig, spec: aritpim.FloatSpec) -> int:
+    """Eq. (10) unpack: reversal + conj + 2 cadds + mul-by-i + exponent
+    decrements, charged with the paper's §5 cost dictionary."""
+    word = aritpim.complex_word_bits(spec)
+    cycles = 0
+    cycles += (cfg.crossbar_rows // 2) * 6        # order reversal (row swaps)
+    cycles += 2                                   # conjugate: sign-bit NOT
+    cycles += 2 * aritpim.complex_add_cycles(spec)  # (Zrev* +- Z)
+    cycles += aritpim.swap_cycles(word // 2) + 2  # multiply by i
+    cycles += 2 * 2                               # /2: exponent decrements
+    return cycles
+
+
+@dataclasses.dataclass(frozen=True)
+class PIMPolymulResult:
+    output: np.ndarray
+    counters: Counters
+
+
+def pim_polymul(a: np.ndarray, b: np.ndarray, cfg: PIMConfig,
+                spec: aritpim.FloatSpec) -> PIMPolymulResult:
+    """Circular product (length n) on the simulator, complex coefficients."""
+    n = len(a)
+    beta = max(1, n // (2 * cfg.crossbar_rows))
+    serial = math.ceil(beta / cfg.partitions)
+    fa = pim_fft(np.asarray(a), cfg, spec, charge_perm=False)
+    fb = pim_fft(np.asarray(b), cfg, spec, charge_perm=False)
+    sim = CrossbarSim(cfg, spec)
+    prod = fa.output * fb.output
+    sim.charge_column_op("cmul", cfg.crossbar_rows, serial=serial)
+    inv = pim_fft(prod, cfg, spec, inverse=True, charge_perm=False)
+    ctr = Counters(
+        cycles=fa.counters.cycles + fb.counters.cycles + sim.ctr.cycles
+        + inv.counters.cycles,
+        gates=fa.counters.gates + fb.counters.gates + sim.ctr.gates
+        + inv.counters.gates)
+    return PIMPolymulResult(output=inv.output, counters=ctr)
+
+
+def pim_polymul_real(a: np.ndarray, b: np.ndarray, cfg: PIMConfig,
+                     spec: aritpim.FloatSpec) -> PIMPolymulResult:
+    """Circular product of REAL polys via Eq. (10): one packed forward FFT."""
+    n = len(a)
+    beta = max(1, n // (2 * cfg.crossbar_rows))
+    serial = math.ceil(beta / cfg.partitions)
+    z = np.asarray(a, np.float64) + 1j * np.asarray(b, np.float64)
+    fz = pim_fft(z, cfg, spec, charge_perm=False)
+    sim = CrossbarSim(cfg, spec)
+    zf = fz.output
+    zrev = np.roll(zf[::-1], 1)
+    fa = 0.5 * (np.conj(zrev) + zf)
+    fb = 0.5j * (np.conj(zrev) - zf)
+    sim.ctr.cycles += _unpack_cycles(cfg, spec) * serial
+    sim.ctr.gates += _unpack_cycles(cfg, spec) * serial * cfg.crossbar_rows
+    prod = fa * fb
+    sim.charge_column_op("cmul", cfg.crossbar_rows, serial=serial)
+    inv = pim_fft(prod, cfg, spec, inverse=True, charge_perm=False)
+    ctr = Counters(
+        cycles=fz.counters.cycles + sim.ctr.cycles + inv.counters.cycles,
+        gates=fz.counters.gates + sim.ctr.gates + inv.counters.gates)
+    return PIMPolymulResult(output=inv.output.real, counters=ctr)
+
+
+# ---------------------------------------------------------------------------
+# Closed forms + throughput/energy (benchmarks)
+# ---------------------------------------------------------------------------
+
+def polymul_latency_cycles(n: int, cfg: PIMConfig, spec: aritpim.FloatSpec,
+                           *, real: bool = False) -> int:
+    beta = max(1, n // (2 * cfg.crossbar_rows))
+    serial = math.ceil(beta / cfg.partitions)
+    fwd = fft_latency_cycles(n, cfg, spec, charge_perm=False)
+    inv = fft_latency_cycles(n, cfg, spec, charge_perm=False, inverse=True)
+    total = (1 if real else 2) * fwd + inv
+    total += aritpim.complex_mul_cycles(spec) * serial
+    if real:
+        total += _unpack_cycles(cfg, spec) * serial
+    return total
+
+
+def polymul_area_words(real: bool) -> int:
+    """Operand words per element: complex needs a and b resident (2), real
+    packs both into one complex sequence (1)."""
+    return 1 if real else 2
+
+
+def polymul_throughput_per_s(n: int, cfg: PIMConfig, spec: aritpim.FloatSpec,
+                             *, real: bool = False) -> float:
+    word = aritpim.complex_word_bits(spec)
+    lat = polymul_latency_cycles(n, cfg, spec, real=real) / cfg.clock_hz
+    r = cfg.crossbar_rows
+    beta = max(1, n // (2 * r))
+    data_cols = polymul_area_words(real) * 2 * beta * word
+    scratch = cfg.temp_words * word * cfg.partitions
+    area = max(1.0, (data_cols + scratch) / cfg.crossbar_cols)
+    batch = int(cfg.num_crossbars / area)
+    return batch * cfg.concurrency / lat
+
+
+def polymul_energy_j_per_op(n: int, cfg: PIMConfig, spec: aritpim.FloatSpec,
+                            *, real: bool = False) -> float:
+    rng = np.random.default_rng(0)
+    if real:
+        a = rng.standard_normal(n)
+        b = rng.standard_normal(n)
+        res = pim_polymul_real(a, b, cfg, spec)
+    else:
+        a = rng.standard_normal(n) + 1j * rng.standard_normal(n)
+        b = rng.standard_normal(n) + 1j * rng.standard_normal(n)
+        res = pim_polymul(a, b, cfg, spec)
+    return res.counters.energy_j(cfg)

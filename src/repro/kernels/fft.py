@@ -1,0 +1,216 @@
+"""Pallas TPU kernel: batched Stockham FFT, all stages resident in VMEM.
+
+This is the TPU adaptation of FourierPIM's in-memory FFT (paper §4):
+
+* The paper keeps the whole transform inside a memristive crossbar so no data
+  ever moves to a compute unit. Here the whole transform stays inside VMEM:
+  one HBM read of the input block, ``log_radix n`` butterfly sweeps on VMEM
+  values, one HBM write. An XLA/cuFFT-style implementation round-trips HBM
+  once per fused stage group; for the memory-bound FFT regime (Fig. 1 of the
+  paper) this single-residency property is the entire win.
+* The paper's element-parallel butterfly (§4.2, one butterfly per crossbar
+  row) maps to the batch dimension living on sublanes: every (batch-row,
+  lane-column) performs an independent butterfly per VPU instruction.
+* The paper's r/2r layout dance (§4.3–4.4, snake order + in-place swaps to
+  avoid an intermediate representation) maps to the Stockham autosort
+  schedule: contiguous strided slices only, no bit-reversal permutation, no
+  gathers — the same "never leave the array, never reorder through memory"
+  property in the layout natural to a vector unit.
+* The paper's partitions (§4.5, more parallel column-units per array) map to
+  the radix-4 path: twice the butterflies retired per sweep, halving the
+  number of sweeps, which is the same lever (more parallel work per step).
+
+Complex data is carried as split real/imag planes (SoA): a memristor row can
+concatenate bit-fields at zero cost, a VPU cannot (DESIGN.md §2).
+
+Stockham invariant (see kernels/ref.py::fft_stockham for the jnp oracle):
+  A_t has shape (B, L, r), L = radix^t-ish, r = n / L, and column q of A_t is
+  FFT_L of the decimated subsequence x[q :: r].
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _log2(n: int) -> int:
+    assert n & (n - 1) == 0 and n > 0, f"n={n} must be a power of two"
+    return n.bit_length() - 1
+
+
+def twiddle_table(n: int, *, inverse: bool = False) -> tuple[np.ndarray, np.ndarray]:
+    """Master twiddle table W[k] = exp(sign * 2 pi i k / n), k < n, fp32 planes.
+
+    Every stage's twiddles are static strided slices of this one table
+    (stage L uses W[:: n/(2L)][:L]), so a single (1, n) pair serves the whole
+    kernel. Computed in float64 then rounded once to fp32.
+    """
+    k = np.arange(n, dtype=np.float64)
+    sign = 1.0 if inverse else -1.0
+    ang = sign * 2.0 * np.pi * k / n
+    return (np.cos(ang).astype(np.float32)[None, :],
+            np.sin(ang).astype(np.float32)[None, :])
+
+
+def _cmul(ar, ai, br, bi):
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def _mul_i(r, i, sign: float):
+    """(r + i j) * (sign * j):  sign=-1 -> multiply by -i, sign=+1 -> by +i."""
+    if sign < 0:
+        return i, -r
+    return -i, r
+
+
+def _radix2_stage(yr, yi, wr, wi, L, r, n):
+    """One Stockham radix-2 sweep: (B, L, r) -> (B, 2L, r/2)."""
+    half = r // 2
+    er, ei = yr[:, :, :half], yi[:, :, :half]
+    orr, oii = yr[:, :, half:], yi[:, :, half:]
+    stride = n // (2 * L)
+    twr = jax.lax.slice_in_dim(wr, 0, L * stride, stride, axis=1)  # (1, L)
+    twi = jax.lax.slice_in_dim(wi, 0, L * stride, stride, axis=1)
+    twr = twr[:, :, None]  # (1, L, 1) broadcast over batch and q
+    twi = twi[:, :, None]
+    tr, ti = _cmul(twr, twi, orr, oii)
+    outr = jnp.concatenate([er + tr, er - tr], axis=1)
+    outi = jnp.concatenate([ei + ti, ei - ti], axis=1)
+    return outr, outi
+
+
+def _radix4_stage(yr, yi, wr, wi, L, r, n, sign: float):
+    """One Stockham radix-4 sweep: (B, L, r) -> (B, 4L, r/4).
+
+    U[l + m L'] = sum_j w4^{jm} T_j,  T_j = W_n^{j l (n/4L)} E_j[l],
+    with E_j = A[:, :, j*r/4 : (j+1)*r/4] and L' = 4L blocks concatenated.
+    """
+    q = r // 4
+    s = n // (4 * L)
+    e = [(yr[:, :, j * q:(j + 1) * q], yi[:, :, j * q:(j + 1) * q]) for j in range(4)]
+    t = [e[0]]
+    for j in (1, 2, 3):
+        twr = jax.lax.slice_in_dim(wr, 0, L * j * s, j * s, axis=1)[:, :, None]
+        twi = jax.lax.slice_in_dim(wi, 0, L * j * s, j * s, axis=1)[:, :, None]
+        t.append(_cmul(twr, twi, e[j][0], e[j][1]))
+    (t0r, t0i), (t1r, t1i), (t2r, t2i), (t3r, t3i) = t
+    # Even/odd regroup
+    a_r, a_i = t0r + t2r, t0i + t2i      # T0 + T2
+    b_r, b_i = t0r - t2r, t0i - t2i      # T0 - T2
+    c_r, c_i = t1r + t3r, t1i + t3i      # T1 + T3
+    d_r, d_i = t1r - t3r, t1i - t3i      # T1 - T3
+    id_r, id_i = _mul_i(d_r, d_i, sign)  # (+-i)(T1 - T3)
+    outr = jnp.concatenate([a_r + c_r, b_r + id_r, a_r - c_r, b_r - id_r], axis=1)
+    outi = jnp.concatenate([a_i + c_i, b_i + id_i, a_i - c_i, b_i - id_i], axis=1)
+    return outr, outi
+
+
+def stockham_stages(xr, xi, wr, wi, *, n: int, inverse: bool, radix: int,
+                    scale: float | None = None):
+    """Run all Stockham sweeps on values already resident in VMEM/registers.
+
+    xr, xi: (B_blk, n) fp32. wr, wi: (1, n) fp32 master table (already
+    conjugated for inverse). Returns (B_blk, n) planes.
+    """
+    sign = 1.0 if inverse else -1.0
+    b = xr.shape[0]
+    yr = xr.reshape(b, 1, n)
+    yi = xi.reshape(b, 1, n)
+    L, r = 1, n
+    stages2 = _log2(n)
+    if radix == 4 and stages2 % 2 == 1:
+        yr, yi = _radix2_stage(yr, yi, wr, wi, L, r, n)
+        L, r = 2 * L, r // 2
+    while r > 1:
+        if radix == 4 and r % 4 == 0:
+            yr, yi = _radix4_stage(yr, yi, wr, wi, L, r, n, sign)
+            L, r = 4 * L, r // 4
+        else:
+            yr, yi = _radix2_stage(yr, yi, wr, wi, L, r, n)
+            L, r = 2 * L, r // 2
+    yr = yr.reshape(b, n)
+    yi = yi.reshape(b, n)
+    if inverse:
+        inv = 1.0 / n if scale is None else scale / n
+        yr, yi = yr * inv, yi * inv
+    elif scale is not None:
+        yr, yi = yr * scale, yi * scale
+    return yr, yi
+
+
+def _fft_kernel(wr_ref, wi_ref, xr_ref, xi_ref, or_ref, oi_ref, *,
+                n: int, inverse: bool, radix: int):
+    xr = xr_ref[...].astype(jnp.float32)
+    xi = xi_ref[...].astype(jnp.float32)
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+    yr, yi = stockham_stages(xr, xi, wr, wi, n=n, inverse=inverse, radix=radix)
+    or_ref[...] = yr.astype(or_ref.dtype)
+    oi_ref[...] = yi.astype(oi_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# VMEM planning: pick the batch block so the working set fits.
+# ---------------------------------------------------------------------------
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # conservative half of v5e's 16 MB VMEM
+_LIVE_FACTOR = 4  # in+out planes plus stage temporaries, empirically safe
+
+
+def plan_batch_block(n: int, max_block: int = 1024) -> int:
+    """Largest power-of-two batch block whose fp32 working set fits VMEM."""
+    per_row = 2 * n * 4 * _LIVE_FACTOR  # two planes, fp32, live copies
+    blk = VMEM_BUDGET_BYTES // per_row
+    blk = max(1, min(max_block, blk))
+    return 1 << (blk.bit_length() - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "radix", "interpret", "block_b"))
+def fft_planes(xr: jax.Array, xi: jax.Array, *, inverse: bool = False,
+               radix: int = 2, interpret: bool = True,
+               block_b: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """Batched FFT on split planes. xr, xi: (B, n). Returns planes (B, n).
+
+    The pallas_call tiles the batch: grid=(B/B_blk,), each program transforms
+    its (B_blk, n) block entirely in VMEM (one HBM read + one HBM write).
+    """
+    assert xr.shape == xi.shape and xr.ndim == 2
+    b, n = xr.shape
+    blk = block_b or plan_batch_block(n)
+    pad = (-b) % blk
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+        xi = jnp.pad(xi, ((0, pad), (0, 0)))
+    bp = xr.shape[0]
+    wr_np, wi_np = twiddle_table(n, inverse=inverse)
+    wr = jnp.asarray(wr_np)
+    wi = jnp.asarray(wi_np)
+    out_dtype = xr.dtype
+    kern = functools.partial(_fft_kernel, n=n, inverse=inverse, radix=radix)
+    yr, yi = pl.pallas_call(
+        kern,
+        grid=(bp // blk,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),   # twiddle real (broadcast)
+            pl.BlockSpec((1, n), lambda i: (0, 0)),   # twiddle imag
+            pl.BlockSpec((blk, n), lambda i: (i, 0)),  # x real
+            pl.BlockSpec((blk, n), lambda i: (i, 0)),  # x imag
+        ],
+        out_specs=[
+            pl.BlockSpec((blk, n), lambda i: (i, 0)),
+            pl.BlockSpec((blk, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, n), out_dtype),
+            jax.ShapeDtypeStruct((bp, n), out_dtype),
+        ],
+        interpret=interpret,
+    )(wr, wi, xr, xi)
+    if pad:
+        yr, yi = yr[:b], yi[:b]
+    return yr, yi

@@ -1,0 +1,166 @@
+"""Public jit'd wrappers over the Fourier kernels.
+
+Backend selection
+-----------------
+``backend='pallas'`` runs the Pallas kernels (compiled on TPU; interpret mode
+on CPU — bit-exact dataflow, Python-speed). ``backend='xla'`` runs the same
+Stockham dataflow as a plain jnp program (fast on CPU, used by the model
+layers and examples in this container). ``backend=None`` auto-selects:
+Pallas on TPU, XLA elsewhere. Override with env ``REPRO_FFT_BACKEND``.
+
+All functions accept/return complex arrays (complex64) or real arrays where
+documented; shape (..., n) with any leading batch dims, n a power of two.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fft as _kfft
+from repro.kernels import polymul as _kpoly
+from repro.kernels import ref as _ref
+
+
+def _auto_backend() -> str:
+    env = os.environ.get("REPRO_FFT_BACKEND")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _as2d(x):
+    n = x.shape[-1]
+    return x.reshape(-1, n), x.shape[:-1]
+
+
+def _pallas_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fft(x: jax.Array, *, inverse: bool = False, backend: str | None = None,
+        radix: int = 2) -> jax.Array:
+    """Batched FFT of a complex array (..., n)."""
+    backend = backend or _auto_backend()
+    if backend == "xla":
+        return _ref.fft_stockham(x, inverse=inverse)
+    x2, lead = _as2d(x)
+    xr = jnp.real(x2).astype(jnp.float32)
+    xi = jnp.imag(x2).astype(jnp.float32)
+    yr, yi = _kfft.fft_planes(xr, xi, inverse=inverse, radix=radix,
+                              interpret=_pallas_interpret())
+    return (yr + 1j * yi).astype(jnp.complex64).reshape(*lead, x.shape[-1])
+
+
+def ifft(x: jax.Array, **kw) -> jax.Array:
+    return fft(x, inverse=True, **kw)
+
+
+def polymul(a: jax.Array, b: jax.Array, *, mode: str = "linear",
+            backend: str | None = None, radix: int = 2) -> jax.Array:
+    """Polynomial multiplication via the convolution theorem (paper Eq. (9)).
+
+    mode='circular': product mod x^n - 1 (length n).
+    mode='linear'  : full product — inputs zero-padded to 2n (paper fn. 4);
+                     returns length 2n (last coefficient structurally 0).
+
+    Real inputs dispatch to the Eq. (10) real-packed path (one complex FFT
+    for both operands); complex inputs use the three-transform path.
+    """
+    assert a.shape == b.shape
+    n = a.shape[-1]
+    if mode == "linear":
+        pads = [(0, 0)] * (a.ndim - 1) + [(0, n)]
+        a = jnp.pad(a, pads)
+        b = jnp.pad(b, pads)
+        n = 2 * n
+    elif mode != "circular":
+        raise ValueError(f"unknown mode {mode!r}")
+    backend = backend or _auto_backend()
+    real_in = not jnp.iscomplexobj(a) and not jnp.iscomplexobj(b)
+
+    if backend == "xla":
+        fa = _ref.fft_stockham(a.astype(jnp.complex64))
+        fb = _ref.fft_stockham(b.astype(jnp.complex64))
+        c = _ref.fft_stockham(fa * fb, inverse=True)
+        return jnp.real(c).astype(jnp.float32) if real_in else c
+
+    a2, lead = _as2d(a)
+    b2, _ = _as2d(b)
+    if real_in:
+        c = _kpoly.polymul_real_planes(a2.astype(jnp.float32),
+                                       b2.astype(jnp.float32), radix=radix,
+                                       interpret=_pallas_interpret())
+        return c.reshape(*lead, n)
+    cr, ci = _kpoly.polymul_complex_planes(
+        jnp.real(a2).astype(jnp.float32), jnp.imag(a2).astype(jnp.float32),
+        jnp.real(b2).astype(jnp.float32), jnp.imag(b2).astype(jnp.float32),
+        radix=radix, interpret=_pallas_interpret())
+    return (cr + 1j * ci).astype(jnp.complex64).reshape(*lead, n)
+
+
+def realpack_fft(x: jax.Array, y: jax.Array, *, backend: str | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """FFTs of two real sequences via one complex FFT (paper Eq. (10))."""
+    z = x.astype(jnp.complex64) + 1j * y.astype(jnp.complex64)
+    zf = fft(z, backend=backend)
+    zrev = jnp.roll(jnp.flip(zf, axis=-1), 1, axis=-1)
+    xk = 0.5 * (jnp.conj(zrev) + zf)
+    yk = 0.5j * (jnp.conj(zrev) - zf)
+    return xk, yk
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+def fft2(x: jax.Array, *, inverse: bool = False,
+         backend: str | None = None) -> jax.Array:
+    """2-D FFT of (..., H, W) via row + column transforms of the batched
+    1-D primitive (separability) — the paper's signal-processing use case
+    lifted to images. H, W powers of two."""
+    y = fft(x, inverse=inverse, backend=backend)          # along W
+    y = jnp.swapaxes(y, -1, -2)
+    y = fft(y, inverse=inverse, backend=backend)          # along H
+    return jnp.swapaxes(y, -1, -2)
+
+
+def fft_conv2d(img: jax.Array, kern: jax.Array, *,
+               backend: str | None = None) -> jax.Array:
+    """'same'-padded 2-D convolution via the convolution theorem.
+
+    img: (..., H, W) real; kern: (kh, kw) real, kh/kw odd. O(HW log HW).
+    """
+    H, W = img.shape[-2:]
+    kh, kw = kern.shape
+    Hp = _next_pow2(H + kh)
+    Wp = _next_pow2(W + kw)
+    pads = [(0, 0)] * (img.ndim - 2) + [(0, Hp - H), (0, Wp - W)]
+    xi = jnp.pad(img.astype(jnp.float32), pads)
+    ki = jnp.pad(kern.astype(jnp.float32), ((0, Hp - kh), (0, Wp - kw)))
+    fx = fft2(xi.astype(jnp.complex64), backend=backend)
+    fk = fft2(ki.astype(jnp.complex64), backend=backend)
+    full = jnp.real(fft2(fx * fk, inverse=True, backend=backend))
+    r0, c0 = kh // 2, kw // 2
+    return full[..., r0:r0 + H, c0:c0 + W].astype(img.dtype)
+
+
+def fft_causal_conv(x: jax.Array, k: jax.Array, *,
+                    backend: str | None = None) -> jax.Array:
+    """Causal depthwise long convolution via FFT: y[t] = sum_{s<=t} k[s] x[t-s].
+
+    x: (..., T) real signal, k: (..., K) real taps (K <= T). O(T log T) — the
+    sub-quadratic primitive the model layers use for Fourier token mixing.
+    Internally pads to the next power of two >= T + K to avoid wraparound.
+    """
+    T = x.shape[-1]
+    K = k.shape[-1]
+    n = _next_pow2(T + K)
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, n - T)])
+    kp = jnp.pad(k, [(0, 0)] * (k.ndim - 1) + [(0, n - K)])
+    fa = fft(xp.astype(jnp.complex64), backend=backend)
+    fb = fft(kp.astype(jnp.complex64), backend=backend)
+    y = ifft(fa * fb, backend=backend)
+    return jnp.real(y[..., :T]).astype(x.dtype)

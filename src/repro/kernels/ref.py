@@ -1,0 +1,176 @@
+"""Pure-jnp oracles for the Fourier kernels.
+
+Every Pallas kernel in this package is validated against these references in
+``tests/test_kernels_fft.py``. The references are deliberately written three
+independent ways (naive Vandermonde DFT, recursive radix-2 FFT, and an
+iterative Stockham in plain jnp) so a bug shared by the kernel and one oracle
+cannot hide.
+
+Complex values are carried as jnp complex64/complex128 here; the kernels use
+split real/imag planes (see DESIGN.md §2 — SoA adaptation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Naive O(n^2) DFT — the ground truth (Eq. (1)/(2) of the paper).
+# ---------------------------------------------------------------------------
+
+def dft_matrix(n: int, *, inverse: bool = False, dtype=jnp.complex64) -> jax.Array:
+    """Vandermonde matrix W[j, k] = omega_n^{j k},  omega_n = e^{-2 pi i / n}."""
+    k = np.arange(n)
+    sign = 1.0 if inverse else -1.0
+    w = np.exp(sign * 2j * np.pi * np.outer(k, k) / n)
+    return jnp.asarray(w, dtype=dtype)
+
+
+def dft(x: jax.Array, *, inverse: bool = False) -> jax.Array:
+    """Naive DFT via matmul; x shape (..., n)."""
+    n = x.shape[-1]
+    x = x.astype(jnp.complex64)
+    y = x @ dft_matrix(n, inverse=inverse).T
+    if inverse:
+        y = y / n
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Recursive radix-2 FFT (Eq. (3) of the paper) — textbook divide and conquer.
+# ---------------------------------------------------------------------------
+
+def fft_recursive(x: jax.Array) -> jax.Array:
+    """Recursive decimation-in-time FFT; x shape (..., n), n a power of two."""
+    n = x.shape[-1]
+    if n == 1:
+        return x.astype(jnp.complex64)
+    assert n % 2 == 0, f"n={n} is not a power of two"
+    even = fft_recursive(x[..., 0::2])
+    odd = fft_recursive(x[..., 1::2])
+    k = jnp.arange(n // 2)
+    w = jnp.exp(-2j * jnp.pi * k / n).astype(jnp.complex64)
+    t = w * odd
+    return jnp.concatenate([even + t, even - t], axis=-1)
+
+
+def ifft_recursive(x: jax.Array) -> jax.Array:
+    n = x.shape[-1]
+    return jnp.conj(fft_recursive(jnp.conj(x))) / n
+
+
+# ---------------------------------------------------------------------------
+# Iterative Stockham autosort FFT in plain jnp.
+#
+# This is the exact dataflow the Pallas kernel implements (kernels/fft.py) and
+# also serves as the fast pure-XLA fallback used for CPU execution paths where
+# interpret-mode Pallas would be too slow (e.g. examples/train_lm.py).
+#
+# Invariant: A_t has shape (..., L, r) with L = 2^t, r = n / 2^t and
+#   A_t[..., l, q] = FFT_{L}( x[q :: r] )[l].
+# Transition (DIT split of each length-2L subsequence into even/odd parts):
+#   E = A_t[..., :, :r/2],  O = A_t[..., :, r/2:]
+#   A_{t+1}[..., l,     q] = E[..., l, q] + w_l O[..., l, q]
+#   A_{t+1}[..., l + L, q] = E[..., l, q] - w_l O[..., l, q]
+# with w_l = exp(-2 pi i l / 2L). No bit-reversal permutation is ever applied
+# — the paper's r/2r "avoid the intermediate representation" goal, in the
+# layout natural to vector hardware (DESIGN.md §2).
+# ---------------------------------------------------------------------------
+
+def fft_stockham(x: jax.Array, *, inverse: bool = False) -> jax.Array:
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"n={n} must be a power of two"
+    batch = x.shape[:-1]
+    sign = 1.0 if inverse else -1.0
+    y = x.astype(jnp.complex64).reshape(*batch, 1, n)
+    L, r = 1, n
+    while r > 1:
+        half = r // 2
+        e = y[..., :, :half]
+        o = y[..., :, half:]
+        w = jnp.exp(sign * 2j * jnp.pi * jnp.arange(L) / (2 * L)).astype(jnp.complex64)
+        w = w[..., :, None]
+        t = w * o
+        y = jnp.concatenate([e + t, e - t], axis=-2)
+        L, r = 2 * L, half
+    y = y.reshape(*batch, n)
+    if inverse:
+        y = y / n
+    return y
+
+
+def ifft_stockham(x: jax.Array) -> jax.Array:
+    return fft_stockham(x, inverse=True)
+
+
+# ---------------------------------------------------------------------------
+# Convolution / polynomial multiplication references (paper §5).
+# ---------------------------------------------------------------------------
+
+def convolve_direct(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Full linear convolution, O(n^2), via explicit sum. a,b shape (..., n)."""
+    n = a.shape[-1]
+    m = b.shape[-1]
+    out_len = n + m - 1
+    a64 = a.astype(jnp.float64) if a.dtype in (jnp.float32, jnp.float64) else a.astype(jnp.complex128)
+    b64 = b.astype(a64.dtype)
+    # out[k] = sum_j a[j] b[k - j]
+    pads = [(0, 0)] * (a.ndim - 1) + [(0, out_len - n)]
+    a_p = jnp.pad(a64, pads)
+    rows = jnp.stack([jnp.roll(a_p, s, axis=-1) for s in range(m)], axis=-2)  # (..., m, out_len)
+    out = jnp.einsum("...m,...ml->...l", b64, rows)
+    return out
+
+
+def polymul_circular_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Circular (mod x^n - 1) product via the convolution theorem with oracle DFTs."""
+    fa = dft(a)
+    fb = dft(b)
+    return dft(fa * fb, inverse=True)
+
+
+def polymul_linear_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Full product of degree-(n-1) polys: zero-pad to 2n then circular multiply.
+
+    Matches the paper's footnote 4: pad with n zeros for degree up to 2n.
+    Output length 2n (last coefficient is structurally zero).
+    """
+    n = a.shape[-1]
+    pads = [(0, 0)] * (a.ndim - 1) + [(0, n)]
+    return polymul_circular_ref(jnp.pad(a, pads), jnp.pad(b, pads))
+
+
+# ---------------------------------------------------------------------------
+# Real-packing (paper Eq. (10)): two real FFTs from one complex FFT.
+# ---------------------------------------------------------------------------
+
+def realpack_fft_ref(x: jax.Array, y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """FFTs of two real sequences via one complex FFT of z = x + i y.
+
+    X_k = (conj(Z_{n-k}) + Z_k) / 2,   Y_k = i (conj(Z_{n-k}) - Z_k) / 2.
+    (Indices mod n: Z_{n-0} := Z_0.)
+    """
+    z = x.astype(jnp.complex64) + 1j * y.astype(jnp.complex64)
+    zf = dft(z)
+    zrev = jnp.roll(jnp.flip(zf, axis=-1), 1, axis=-1)  # Z_{n-k}
+    xk = 0.5 * (jnp.conj(zrev) + zf)
+    yk = 0.5j * (jnp.conj(zrev) - zf)
+    return xk, yk
+
+
+# ---------------------------------------------------------------------------
+# FFT-based long convolution (used by models/layers/fourier.py).
+# ---------------------------------------------------------------------------
+
+def fft_causal_conv_ref(x: jax.Array, k: jax.Array) -> jax.Array:
+    """Causal depthwise convolution y[t] = sum_{s<=t} k[s] x[t-s], oracle version.
+
+    x: (..., T), k: (..., T) (kernel padded/truncated to T taps).
+    """
+    T = x.shape[-1]
+    full = convolve_direct(x, k)
+    return full[..., :T].astype(x.dtype)

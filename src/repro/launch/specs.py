@@ -1,0 +1,130 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+input_specs() follows the shannon/kernels pattern: weak-type-correct,
+shardable, zero allocation. sanitize_spec() drops mesh axes that do not
+divide the corresponding dimension (e.g. batch=1 at long_500k, 25 heads on a
+16-way model axis) so every cell lowers cleanly on both production meshes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ShapeSpec
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+DP = ("pod", "data")
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop axes that don't exist in the mesh or don't divide the dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        # skip absent axes; keep the longest dividing prefix of the rest
+        kept = []
+        prod = 1
+        for a in axes:
+            if a not in mesh.shape:
+                continue
+            if dim % (prod * mesh.shape[a]) == 0:
+                kept.append(a)
+                prod *= mesh.shape[a]
+            else:
+                break
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+def sanitize_tree(specs: Any, shapes: Any, mesh: Mesh) -> Any:
+    is_spec = lambda x: isinstance(x, P)  # noqa: E731
+    return jax.tree.map(
+        lambda sp, sh: sanitize_spec(sp, sh.shape, mesh),
+        specs, shapes, is_leaf=is_spec)
+
+
+def shardings_for(specs: Any, shapes: Any, mesh: Mesh) -> Any:
+    clean = sanitize_tree(specs, shapes, mesh)
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), clean,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Per-cell inputs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, *,
+                with_labels: bool) -> tuple[dict, dict]:
+    """(ShapeDtypeStructs, PartitionSpecs) for a train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    sds: dict[str, Any] = {}
+    sp: dict[str, Any] = {}
+    if cfg.frontend == "embeddings":
+        sds["embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        sp["embeds"] = P(DP, None, None)
+        sds["tokens"] = None
+        sp["tokens"] = None
+    else:
+        sds["tokens"] = SDS((B, S), jnp.int32)
+        sp["tokens"] = P(DP, None)
+    if cfg.mrope_sections is not None:
+        sds["positions"] = SDS((B, S, 3), jnp.int32)
+        sp["positions"] = P(DP, None, None)
+    if with_labels:
+        sds["labels"] = SDS((B, S), jnp.int32)
+        sp["labels"] = P(DP, None)
+    return sds, sp
+
+
+def abstract_opt_state(cfg: ModelConfig, opt_cfg: adamw.OptConfig):
+    params = lm.abstract_params(cfg)
+    return jax.eval_shape(
+        functools.partial(adamw.init_state, cfg=opt_cfg), params)
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: ShapeSpec):
+    return jax.eval_shape(functools.partial(
+        lm.init_decode_state, cfg, shape.global_batch, shape.seq_len))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """(sds, specs) for (token, pos[, positions, embed]) decode inputs."""
+    B = shape.global_batch
+    sds = {"pos": SDS((), jnp.int32)}
+    sp = {"pos": P()}
+    if cfg.frontend == "embeddings":
+        sds["embed"] = SDS((B, 1, cfg.d_model), jnp.bfloat16)
+        sp["embed"] = P(DP, None, None)
+        sds["token"] = None
+        sp["token"] = None
+    else:
+        sds["token"] = SDS((B,), jnp.int32)
+        sp["token"] = P(DP)
+    if cfg.mrope_sections is not None:
+        sds["positions"] = SDS((B, 1, 3), jnp.int32)
+        sp["positions"] = P(DP, None, None)
+    return sds, sp
+
+
+def opt_config_for(cfg: ModelConfig) -> adamw.OptConfig:
+    """8-bit moments for the >=70B archs so optimizer state fits HBM."""
+    big = cfg.param_count() > 7e10
+    return adamw.OptConfig(state_dtype="int8" if big else "float32")

@@ -1,0 +1,110 @@
+"""Common layers: RMSNorm, rotary embeddings (incl. M-RoPE), SwiGLU MLP,
+and the FourierPIM-derived token-mixing layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.kernels import ops as kops
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions (...,) -> angles (..., dim/2)."""
+    freq = theta ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    return positions.astype(jnp.float32)[..., None] * freq
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (B, S, N, hd); positions: (B, S)."""
+    hd = x.shape[-1]
+    ang = _rope_angles(positions, hd, theta)          # (B, S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, *,
+                sections: tuple[int, int, int],
+                theta: float = 10_000.0) -> jax.Array:
+    """Qwen2-VL multimodal rotary: positions (B, S, 3) = (t, h, w) streams.
+
+    The rotary feature dim is split into three sections, each rotated by its
+    own position stream (temporal / height / width). Text tokens carry
+    identical t=h=w indices, reducing to standard RoPE.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    s0, s1, s2 = sections
+    assert s0 + s1 + s2 == half, (sections, half)
+    ang_parts = []
+    for i, sec in enumerate((s0, s1, s2)):
+        freq_idx = sum((s0, s1, s2)[:i]) * 2 + jnp.arange(0, 2 * sec, 2,
+                                                          dtype=jnp.float32)
+        freq = theta ** (-freq_idx / hd)
+        ang_parts.append(positions[..., i].astype(jnp.float32)[..., None]
+                         * freq)
+    ang = jnp.concatenate(ang_parts, axis=-1)          # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(params: dict, x: jax.Array,
+               reduce_dtype=None) -> jax.Array:
+    """params: w_gate (d, f), w_up (d, f), w_down (f, d).
+
+    reduce_dtype: output dtype of the TP-partial down-projection (its
+    partial sums are what the model axis all-reduces)."""
+    dtype = x.dtype
+    gate = x @ params["w_gate"].astype(dtype)
+    up = x @ params["w_up"].astype(dtype)
+    gate = constrain(gate, "batch", None, "model")
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(dtype) * up
+    out = jnp.matmul(h, params["w_down"].astype(dtype),
+                     preferred_element_type=reduce_dtype or jnp.float32)
+    return constrain(out.astype(dtype), "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# FourierPIM token mixing (paper §5 as a sequence-model primitive)
+# ---------------------------------------------------------------------------
+
+def fourier_mixing(params: dict, x: jax.Array) -> jax.Array:
+    """Causal depthwise long convolution over the sequence via the paper's
+    O(log n)-style FFT convolution (kernels.ops.fft_causal_conv).
+
+    params: taps (K, d) learned filter, gate (d, d) output gate projection.
+    x: (B, S, d). Sub-quadratic (O(S log S)) token mixing — the FourierPIM
+    primitive integrated as a model layer (DESIGN.md §Arch-applicability).
+    """
+    dtype = x.dtype
+    taps = params["taps"].astype(jnp.float32)          # (K, d)
+    xt = jnp.swapaxes(x.astype(jnp.float32), -1, -2)   # (B, d, S)
+    kt = jnp.swapaxes(taps, 0, 1)                      # (d, K)
+    y = kops.fft_causal_conv(xt, kt[None], backend="xla")
+    y = jnp.swapaxes(y, -1, -2).astype(dtype)          # (B, S, d)
+    gate = jax.nn.sigmoid((x @ params["gate"].astype(dtype))
+                          .astype(jnp.float32)).astype(dtype)
+    return y * gate

@@ -1,0 +1,94 @@
+"""Mixture-of-Experts FFN: GShard-style grouped top-k dispatch.
+
+Tokens are routed in groups (cfg.moe_group_size) with a per-group expert
+capacity C = ceil(g * k / E * capacity_factor); dispatch/combine are dense
+one-hot einsums (the standard TPU formulation — MXU-friendly, no gathers).
+Experts are tensor-sharded on their f dimension over the `model` axis;
+activations stay batch-sharded (dispatch is local). FLOPs per token =
+k * FFN (+ router), matching the 6*N_active*D roofline accounting.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+
+def init_moe_params(key, cfg, dtype) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = d ** -0.5
+    return {
+        "router": jax.random.normal(k1, (d, E), jnp.float32) * std,
+        "w_gate": jax.random.normal(k2, (E, d, f), dtype) * std,
+        "w_up": jax.random.normal(k3, (E, d, f), dtype) * std,
+        "w_down": jax.random.normal(k4, (E, f, d), dtype) * f ** -0.5,
+    }
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss). Load-balancing aux loss per GShard."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    g = min(cfg.moe_group_size, S)
+    pad = (-S) % g
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    nG = x.shape[1] // g
+    xg = x.reshape(B, nG, g, d)
+
+    logits = (xg.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))      # (B,nG,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                # (B,nG,g,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss: E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1, 2))                    # (E,)
+    assign1 = jax.nn.one_hot(idx[..., 0], E)
+    fe = jnp.mean(assign1, axis=(0, 1, 2))
+    aux = E * jnp.sum(me * fe)
+
+    C = max(1, math.ceil(g * k / E * cfg.capacity_factor))
+    ddt = {"float32": jnp.float32,
+           "bfloat16": jnp.bfloat16}[cfg.moe_dispatch_dtype]
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)      # (B,nG,g,k,E)
+    # priority: slot 0 of every token first, then slot 1, ... (GShard order)
+    flat = jnp.swapaxes(onehot, 3, 2).reshape(B, nG, g * k, E)
+    pos = jnp.cumsum(flat, axis=2) - flat                   # queue position
+    keep = pos < C
+    flat = flat * keep
+    posoh = (jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+             * flat[..., None]).astype(ddt)
+    posoh = posoh.reshape(B, nG, k, g, E, C).transpose(0, 1, 3, 2, 4, 5)
+    gates_k = jnp.swapaxes(gate_vals, -1, -1)               # (B,nG,g,k)
+    combine = jnp.einsum("bngkec,bngk->bngec", posoh,
+                         gates_k.astype(ddt))
+    dispatch = (combine > 0.0).astype(x.dtype)
+
+    rdt = (jnp.bfloat16 if cfg.reduce_dtype == "bfloat16"
+           else jnp.float32)
+    xe = jnp.einsum("bngd,bngec->ebncd", xg.astype(x.dtype), dispatch,
+                    preferred_element_type=rdt).astype(x.dtype)
+    xe = constrain(xe, None, "batch", None, None, None)
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    gate = jnp.einsum("ebncd,edf->ebncf", xe, wg,
+                      preferred_element_type=rdt).astype(x.dtype)
+    up = jnp.einsum("ebncd,edf->ebncf", xe, wu,
+                    preferred_element_type=rdt).astype(x.dtype)
+    gate = constrain(gate, None, "batch", None, None, "model")
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    ye = jnp.einsum("ebncf,efd->ebncd", h, wd,
+                    preferred_element_type=rdt).astype(x.dtype)
+    y = jnp.einsum("ebncd,bngec->bngd", ye, combine.astype(x.dtype),
+                   preferred_element_type=rdt).astype(x.dtype)
+    y = y.reshape(B, nG * g, d)
+    if pad:
+        y = y[:, :S]
+    return constrain(y, "batch", None, None), aux

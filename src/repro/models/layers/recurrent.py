@@ -1,0 +1,172 @@
+"""Recurrent mixers: RWKV6 (Finch) time/channel mixing and a Mamba-style
+selective SSM branch (Hymba's parallel hybrid heads).
+
+Both are linear-time in sequence length via lax.scan (training/prefill) and
+O(1)-state single-step updates (decode) — the sub-quadratic property the
+long_500k shape requires. Neither recurrence is an LTI convolution (the
+decay is data-dependent), so the paper's FFT convolution theorem does NOT
+apply to them — see DESIGN.md §Arch-applicability; they run without the
+FourierPIM primitive.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.layers.common import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mixing (data-dependent decay, per-head matrix state)
+# ---------------------------------------------------------------------------
+
+RWKV_HEAD_DIM = 64
+
+
+def init_rwkv_params(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    H = d // RWKV_HEAD_DIM
+    ks = jax.random.split(key, 8)
+    std = d ** -0.5
+    lora = 64
+    return {
+        "mu": jnp.full((5, d), 0.5, dtype),                # token-shift mix
+        "wr": jax.random.normal(ks[0], (d, d), dtype) * std,
+        "wk": jax.random.normal(ks[1], (d, d), dtype) * std,
+        "wv": jax.random.normal(ks[2], (d, d), dtype) * std,
+        "wg": jax.random.normal(ks[3], (d, d), dtype) * std,
+        "wo": jax.random.normal(ks[4], (d, d), dtype) * std,
+        "w0": jnp.full((d,), -6.0, jnp.float32),           # decay bias
+        "ww1": jax.random.normal(ks[5], (d, lora), dtype) * std,
+        "ww2": jax.random.normal(ks[6], (lora, d), dtype) * lora ** -0.5,
+        "u": jax.random.normal(ks[7], (H, RWKV_HEAD_DIM), jnp.float32) * 0.1,
+    }
+
+
+def _rwkv_inputs(params, x, x_prev):
+    """Token-shifted projections. x: (B, S, d); x_prev: (B, d) last token of
+    the previous chunk (zeros at sequence start)."""
+    dtype = x.dtype
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    mu = params["mu"].astype(dtype)
+    xs = [x + mu[i] * (shifted - x) for i in range(5)]
+    r = xs[0] @ params["wr"].astype(dtype)
+    k = xs[1] @ params["wk"].astype(dtype)
+    v = xs[2] @ params["wv"].astype(dtype)
+    g = xs[3] @ params["wg"].astype(dtype)
+    w_raw = (xs[4].astype(jnp.float32) @ params["ww1"].astype(jnp.float32)
+             @ params["ww2"].astype(jnp.float32)) + params["w0"]
+    w = jnp.exp(-jnp.exp(w_raw))                           # (B, S, d) decay
+    return r, k, v, g, w
+
+
+def rwkv_time_mix(params: dict, x: jax.Array, state: dict | None = None):
+    """x: (B, S, d). Returns (y, new_state). state = {"prev_x": (B, d),
+    "S": (B, H, hd, hd)} carried across chunks / decode steps."""
+    B, S, d = x.shape
+    H = d // RWKV_HEAD_DIM
+    hd = RWKV_HEAD_DIM
+    dtype = x.dtype
+    if state is None:
+        state = {"prev_x": jnp.zeros((B, d), dtype),
+                 "S": jnp.zeros((B, H, hd, hd), jnp.float32)}
+    r, k, v, g, w = _rwkv_inputs(params, x, state["prev_x"])
+    rh = r.reshape(B, S, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, S, H, hd).astype(jnp.float32)
+    wh = w.reshape(B, S, H, hd)
+    u = params["u"]
+
+    def step(Sst, inp):
+        rt, kt, vt, wt = inp                                # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,hd,hd)
+        out = jnp.einsum("bhi,bhij->bhj", rt, Sst + u[..., :, None] * kv)
+        Sst = wt[..., :, None] * Sst + kv
+        return Sst, out
+
+    Sfin, outs = jax.lax.scan(
+        step, state["S"],
+        (jnp.moveaxis(rh, 1, 0), jnp.moveaxis(kh, 1, 0),
+         jnp.moveaxis(vh, 1, 0), jnp.moveaxis(wh, 1, 0)))
+    y = jnp.moveaxis(outs, 0, 1).reshape(B, S, d).astype(dtype)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(dtype)
+    y = y @ params["wo"].astype(dtype)
+    new_state = {"prev_x": x[:, -1], "S": Sfin}
+    return constrain(y, "batch", None, None), new_state
+
+
+def init_rwkv_channel_params(key, cfg, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = d ** -0.5
+    return {
+        "mu_c": jnp.full((2, d), 0.5, dtype),
+        "wk": jax.random.normal(k1, (d, f), dtype) * std,
+        "wv": jax.random.normal(k2, (f, d), dtype) * f ** -0.5,
+        "wr": jax.random.normal(k3, (d, d), dtype) * std,
+    }
+
+
+def rwkv_channel_mix(params: dict, x: jax.Array, prev_x: jax.Array):
+    """RWKV squared-ReLU channel mixing with token shift."""
+    dtype = x.dtype
+    shifted = jnp.concatenate([prev_x[:, None], x[:, :-1]], axis=1)
+    mu = params["mu_c"].astype(dtype)
+    xk = x + mu[0] * (shifted - x)
+    xr = x + mu[1] * (shifted - x)
+    k = jnp.square(jax.nn.relu((xk @ params["wk"].astype(dtype))
+                               .astype(jnp.float32))).astype(dtype)
+    r = jax.nn.sigmoid((xr @ params["wr"].astype(dtype))
+                       .astype(jnp.float32)).astype(dtype)
+    y = r * (k @ params["wv"].astype(dtype))
+    return constrain(y, "batch", None, None), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM branch (Hymba parallel heads)
+# ---------------------------------------------------------------------------
+
+def init_ssm_params(key, cfg, dtype) -> dict:
+    d, n = cfg.d_model, cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    std = d ** -0.5
+    return {
+        "w_dt": jax.random.normal(ks[0], (d, d), dtype) * std,
+        "w_b": jax.random.normal(ks[1], (d, n), dtype) * std,
+        "w_c": jax.random.normal(ks[2], (d, n), dtype) * std,
+        "a_log": jnp.log(jnp.linspace(1.0, float(n), n))[None, :]
+                 * jnp.ones((d, 1), jnp.float32),          # (d, n)
+        "d_skip": jnp.ones((d,), jnp.float32),
+        "dt_bias": jnp.full((d,), -4.0, jnp.float32),
+    }
+
+
+def ssm_mix(params: dict, x: jax.Array, state: jax.Array | None = None):
+    """Selective SSM: h_t = exp(dt_t A) h_{t-1} + dt_t * x_t B_t;
+    y_t = h_t . C_t + D x_t.   x: (B, S, d); state: (B, d, n)."""
+    B, S, d = x.shape
+    n = params["w_b"].shape[-1]
+    dtype = x.dtype
+    if state is None:
+        state = jnp.zeros((B, d, n), jnp.float32)
+    xf = x.astype(jnp.float32)
+    dt = jax.nn.softplus(xf @ params["w_dt"].astype(jnp.float32)
+                         + params["dt_bias"])              # (B,S,d)
+    bt = xf @ params["w_b"].astype(jnp.float32)            # (B,S,n)
+    ct = xf @ params["w_c"].astype(jnp.float32)            # (B,S,n)
+    a = -jnp.exp(params["a_log"])                          # (d,n) negative
+
+    def step(h, inp):
+        xt, dtt, btt, ctt = inp
+        decay = jnp.exp(dtt[..., None] * a)                # (B,d,n)
+        h = decay * h + (dtt * xt)[..., None] * btt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ctt)
+        return h, y
+
+    hfin, ys = jax.lax.scan(
+        step, state,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(bt, 1, 0), jnp.moveaxis(ct, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1) + xf * params["d_skip"]
+    return constrain(y.astype(dtype), "batch", None, None), hfin

@@ -1,0 +1,575 @@
+"""Config-driven decoder LM covering the whole architecture zoo.
+
+One implementation serves all 10 assigned architectures:
+  * mixer: GQA attention (full / SWA / gemma3 local:global), RWKV6, Hymba
+    parallel attn+SSM heads, or FourierPIM token mixing;
+  * FFN: dense SwiGLU or grouped top-k MoE;
+  * embeddings: token table or precomputed frontend embeddings (audio/VLM
+    stubs per the shape contract);
+  * positions: RoPE or M-RoPE (B, S, 3).
+
+Layers are stacked (leading L dim on every block leaf) and executed with
+lax.scan so HLO size / compile time are depth-independent — required for the
+126-layer x 512-device dry-runs. Remat policy per config (none|block|full).
+
+Three entry points (all pure, jit/pjit-friendly):
+  loss_fn / train-style forward   (B, S) tokens -> scalar loss
+  prefill                         builds KV caches at full sequence length
+  decode_step                     one token with cache (serve_step)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import moe as moe_lib
+from repro.models.layers import recurrent as rec_lib
+from repro.models.layers.common import fourier_mixing, rms_norm, swiglu_mlp
+
+BIG_WINDOW = 1 << 30
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (smoke/example scale only; dry-run uses eval_shape)
+# ---------------------------------------------------------------------------
+
+def init_block_params(cfg: ModelConfig, key) -> dict:
+    """Params for ONE layer (un-stacked); stacked by init_params via vmap."""
+    pdt = _dtype(cfg.param_dtype)
+    d = cfg.d_model
+    ks = iter(jax.random.split(key, 16))
+    p: dict[str, Any] = {"ln1": jnp.zeros((d,), pdt),
+                         "ln2": jnp.zeros((d,), pdt)}
+    if cfg.mixer in ("attn", "hymba"):
+        p["attn"] = attn_lib.init_attention_params(next(ks), cfg, pdt)
+    if cfg.mixer == "hymba":
+        p["ssm"] = rec_lib.init_ssm_params(next(ks), cfg, pdt)
+        p["ln_attn_out"] = jnp.zeros((d,), pdt)
+        p["ln_ssm_out"] = jnp.zeros((d,), pdt)
+    if cfg.mixer == "rwkv6":
+        p["rwkv_t"] = rec_lib.init_rwkv_params(next(ks), cfg, pdt)
+        p["rwkv_c"] = rec_lib.init_rwkv_channel_params(next(ks), cfg, pdt)
+    if cfg.mixer == "fourier":
+        p["fourier"] = {
+            "taps": jax.random.normal(next(ks), (cfg.fourier_taps, d), pdt)
+            * 0.02,
+            "gate": jax.random.normal(next(ks), (d, d), pdt) * d ** -0.5,
+        }
+    if cfg.mixer != "rwkv6":
+        if cfg.is_moe:
+            p["moe"] = moe_lib.init_moe_params(next(ks), cfg, pdt)
+        else:
+            p["mlp"] = {
+                "w_gate": jax.random.normal(next(ks), (d, cfg.d_ff), pdt)
+                * d ** -0.5,
+                "w_up": jax.random.normal(next(ks), (d, cfg.d_ff), pdt)
+                * d ** -0.5,
+                "w_down": jax.random.normal(next(ks), (cfg.d_ff, d), pdt)
+                * cfg.d_ff ** -0.5,
+            }
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    pdt = _dtype(cfg.param_dtype)
+    k_emb, k_head, k_blocks = jax.random.split(key, 3)
+    blocks = jax.vmap(
+        lambda k: init_block_params(cfg, k))(
+            jax.random.split(k_blocks, cfg.num_layers))
+    params = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab_padded, cfg.d_model),
+                                   pdt) * 0.02,
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), pdt),
+        "lm_head": jax.random.normal(k_head, (cfg.d_model, cfg.vocab_padded),
+                                     pdt) * cfg.d_model ** -0.5,
+    }
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct pytree (no allocation) — dry-run entry."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs (logical rules; sanitized against the bound mesh at launch)
+# ---------------------------------------------------------------------------
+
+FSDP = ("pod", "data")
+TP = "model"
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    """PartitionSpec pytree matching init_params' structure."""
+    def blk(spec):  # block leaves carry a leading layer dim
+        return P(*([None] + list(spec)))
+
+    b: dict[str, Any] = {"ln1": blk([FSDP]), "ln2": blk([FSDP])}
+    if cfg.mixer in ("attn", "hymba"):
+        a = {"wq": blk([FSDP, TP]), "wk": blk([FSDP, TP]),
+             "wv": blk([FSDP, TP]), "wo": blk([TP, FSDP])}
+        if cfg.qk_norm:
+            a["q_norm"] = blk([None])
+            a["k_norm"] = blk([None])
+        b["attn"] = a
+    if cfg.mixer == "hymba":
+        b["ssm"] = {"w_dt": blk([FSDP, TP]), "w_b": blk([FSDP, None]),
+                    "w_c": blk([FSDP, None]), "a_log": blk([FSDP, None]),
+                    "d_skip": blk([FSDP]), "dt_bias": blk([FSDP])}
+        b["ln_attn_out"] = blk([FSDP])
+        b["ln_ssm_out"] = blk([FSDP])
+    if cfg.mixer == "rwkv6":
+        b["rwkv_t"] = {"mu": blk([None, FSDP]), "wr": blk([FSDP, TP]),
+                       "wk": blk([FSDP, TP]), "wv": blk([FSDP, TP]),
+                       "wg": blk([FSDP, TP]), "wo": blk([TP, FSDP]),
+                       "w0": blk([FSDP]), "ww1": blk([FSDP, TP]),
+                       "ww2": blk([TP, FSDP]), "u": blk([TP, None])}
+        b["rwkv_c"] = {"mu_c": blk([None, FSDP]), "wk": blk([FSDP, TP]),
+                       "wv": blk([TP, FSDP]), "wr": blk([FSDP, TP])}
+    if cfg.mixer == "fourier":
+        b["fourier"] = {"taps": blk([None, FSDP]), "gate": blk([FSDP, TP])}
+    if cfg.mixer != "rwkv6":
+        if cfg.is_moe:
+            b["moe"] = {"router": blk([FSDP, None]),
+                        "w_gate": blk([None, FSDP, TP]),
+                        "w_up": blk([None, FSDP, TP]),
+                        "w_down": blk([None, TP, FSDP])}
+        else:
+            b["mlp"] = {"w_gate": blk([FSDP, TP]), "w_up": blk([FSDP, TP]),
+                        "w_down": blk([TP, FSDP])}
+    return {
+        "embed": P(TP, FSDP),
+        "blocks": b,
+        "final_norm": P(FSDP),
+        "lm_head": P(FSDP, TP),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _layer_windows(cfg: ModelConfig, seq_len: int) -> jnp.ndarray:
+    """Per-layer effective attention window (L,) int32."""
+    if cfg.attention == "full" or cfg.mixer in ("rwkv6", "fourier"):
+        w = [BIG_WINDOW] * cfg.num_layers
+    elif cfg.attention == "swa":
+        w = [cfg.window] * cfg.num_layers
+    elif cfg.attention == "local_global":
+        w = [BIG_WINDOW if cfg.layer_is_global(i) else cfg.window
+             for i in range(cfg.num_layers)]
+    else:
+        w = [BIG_WINDOW] * cfg.num_layers
+    return jnp.asarray(w, jnp.int32)
+
+
+def block_forward(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                  positions: jax.Array, window: jax.Array,
+                  want_cache: bool = False):
+    """One transformer block (train/prefill). Returns (x, aux, cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = ()
+    if cfg.sequence_parallel:
+        # carry (and its saved stack) lives sequence-sharded; the mixer's
+        # projections trigger the gather internally
+        x = constrain(x, "batch", "model", None)
+    h = rms_norm(x, p["ln1"])
+    if cfg.mixer == "attn":
+        y = attn_lib.attention_train(p["attn"], h, cfg, positions=positions,
+                                     window=window)
+        if want_cache:
+            # recompute k/v cheaply for the cache (prefill)
+            _, k, v = attn_lib._qkv(p["attn"], h, cfg, positions)
+            cache = (k, v)
+    elif cfg.mixer == "hymba":
+        y_attn = attn_lib.attention_train(p["attn"], h, cfg,
+                                          positions=positions, window=window)
+        y_ssm, ssm_state = rec_lib.ssm_mix(p["ssm"], h)
+        y = 0.5 * (rms_norm(y_attn, p["ln_attn_out"])
+                   + rms_norm(y_ssm, p["ln_ssm_out"]))
+        if want_cache:
+            _, k, v = attn_lib._qkv(p["attn"], h, cfg, positions)
+            cache = (k, v, ssm_state)
+    elif cfg.mixer == "rwkv6":
+        y, rwkv_state = rec_lib.rwkv_time_mix(p["rwkv_t"], h)
+        if want_cache:
+            cache = (rwkv_state["prev_x"], rwkv_state["S"])
+    elif cfg.mixer == "fourier":
+        y = fourier_mixing(p["fourier"], h)
+        if want_cache:
+            K = cfg.fourier_taps
+            S = h.shape[1]
+            if S >= K:
+                ring = h[:, -K:]        # slots line up when S % K == 0
+            else:
+                ring = jnp.pad(h, ((0, 0), (0, K - S), (0, 0)))
+            cache = (ring,)
+    else:
+        raise ValueError(cfg.mixer)
+    x = x + y
+
+    h2 = rms_norm(x, p["ln2"])
+    if cfg.mixer == "rwkv6":
+        y2, prev_c = rec_lib.rwkv_channel_mix(p["rwkv_c"], h2,
+                                              jnp.zeros_like(h2[:, 0]))
+        if want_cache:
+            cache = cache + (prev_c,)
+    elif cfg.is_moe:
+        y2, aux = moe_lib.moe_ffn(p["moe"], h2, cfg)
+    else:
+        y2 = swiglu_mlp(p["mlp"], h2,
+                        reduce_dtype=jnp.bfloat16
+                        if cfg.reduce_dtype == "bfloat16" else None)
+    x = x + y2
+    if cfg.sequence_parallel:
+        x = constrain(x, "batch", "model", None)
+    return x, aux, cache
+
+
+def _best_outer(L: int) -> int:
+    """Largest divisor of L closest to sqrt(L)."""
+    import math
+    root = int(math.sqrt(L))
+    for d in range(root, 0, -1):
+        if L % d == 0:
+            return d
+    return 1
+
+
+def _scan_blocks(cfg: ModelConfig, params: dict, x: jax.Array, *,
+                 positions: jax.Array, want_cache: bool):
+    windows = _layer_windows(cfg, x.shape[1])
+
+    def body(carry, inp):
+        p, w = inp
+        xc = carry
+        fn = functools.partial(block_forward, cfg, want_cache=want_cache)
+        if cfg.remat in ("block", "full"):
+            fn = jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable
+                if cfg.remat == "full" else
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        xc, aux, cache = fn(p, xc, positions=positions, window=w)
+        return xc, (aux, cache)
+
+    if cfg.scan_layers and cfg.remat == "sqrt":
+        # sqrt(L) nested remat: the outer scan checkpoints only block-group
+        # boundaries, so the saved carry stack is O(sqrt(L)) instead of
+        # O(L); the inner scan recomputes its group in the backward pass.
+        L = cfg.num_layers
+        Lo = _best_outer(L)
+        Li = L // Lo
+        blocks_r = jax.tree.map(
+            lambda a: a.reshape(Lo, Li, *a.shape[1:]), params["blocks"])
+        windows_r = windows.reshape(Lo, Li)
+
+        inner_fn = jax.checkpoint(
+            functools.partial(block_forward, cfg, want_cache=False),
+            policy=jax.checkpoint_policies.nothing_saveable)
+
+        def inner(carry, inp):
+            p, w = inp
+            xc, aux_acc = carry
+            xc, aux, _ = inner_fn(p, xc, positions=positions, window=w)
+            return (xc, aux_acc + aux), None
+
+        @jax.checkpoint
+        def outer_body(carry, inp):
+            ps, ws = inp
+            (xc, aux_acc), _ = jax.lax.scan(inner, carry, (ps, ws))
+            return (xc, aux_acc), None
+
+        (x, aux), _ = jax.lax.scan(
+            outer_body, (x, jnp.zeros((), jnp.float32)),
+            (blocks_r, windows_r))
+        caches = ()
+        assert not want_cache, "sqrt remat is a train-path policy"
+        return x, aux, caches
+
+    if cfg.scan_layers:
+        x, (auxs, caches) = jax.lax.scan(body, x,
+                                         (params["blocks"], windows))
+        aux = jnp.sum(auxs)
+    elif cfg.remat == "sqrt":
+        # unrolled sqrt-remat (cost probes): same two-level checkpoint
+        # structure as the scanned path so recompute FLOPs are counted.
+        L = cfg.num_layers
+        Lo = _best_outer(L)
+        Li = L // Lo
+        inner_fn = jax.checkpoint(
+            functools.partial(block_forward, cfg, want_cache=False),
+            policy=jax.checkpoint_policies.nothing_saveable)
+        aux = jnp.zeros((), jnp.float32)
+
+        def group(xc, aux_acc, idx0, ps):
+            for j in range(Li):
+                p_j = jax.tree.map(lambda a: a[j], ps)
+                xc, a_j, _ = inner_fn(p_j, xc, positions=positions,
+                                      window=windows[idx0 + j])
+                aux_acc = aux_acc + a_j
+            return xc, aux_acc
+
+        for g in range(Lo):
+            ps = jax.tree.map(
+                lambda a: a[g * Li:(g + 1) * Li], params["blocks"])
+            x, aux = jax.checkpoint(
+                functools.partial(group, idx0=g * Li, ps=ps))(x, aux)
+        return x, aux, ()
+    else:
+        caches_list = []
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.num_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, (a_i, c_i) = body(x, (p_i, windows[i]))
+            aux = aux + a_i
+            caches_list.append(c_i)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches_list) \
+            if caches_list and caches_list[0] != () else ()
+    return x, aux, caches
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: Optional[jax.Array], *,
+            positions: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            want_cache: bool = False):
+    """Returns (logits, aux_loss, caches)."""
+    adt = _dtype(cfg.dtype)
+    if cfg.frontend == "embeddings":
+        assert embeds is not None
+        x = embeds.astype(adt)
+    else:
+        x = params["embed"].astype(adt)[tokens]
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(adt)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    x = constrain(x, "batch", "sp", None)
+    x, aux, caches = _scan_blocks(cfg, params, x, positions=positions,
+                                  want_cache=want_cache)
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"].astype(adt)
+    logits = constrain(logits, "batch", None, "model")
+    return logits, aux, caches
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    """Next-token cross entropy (labels = batch['labels'], -1 = ignore)."""
+    logits, aux, _ = forward(
+        cfg, params, batch.get("tokens"),
+        positions=batch.get("positions"), embeds=batch.get("embeds"))
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    # mask padded vocab entries with an additive bias (fusable, keeps the
+    # vocab axis sharded — a gather here would force a 40 GB all-gather)
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad_bias = jnp.where(jnp.arange(cfg.vocab_padded) >= cfg.vocab_size,
+                             -1e9, 0.0)
+        logits = logits + pad_bias[None, None]
+    logits = constrain(logits, "batch", None, "model")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # label pick via fused one-hot contraction (shard-friendly: reduces over
+    # the sharded vocab axis instead of gathering along it)
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), cfg.vocab_padded,
+                            dtype=logits.dtype)
+    picked = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - picked
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with caches
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """SWA archs keep a ring of window size; others the full sequence."""
+    if cfg.attention == "swa" and cfg.mixer in ("attn", "hymba"):
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int,
+                      dtype=None) -> dict:
+    adt = dtype or _dtype(cfg.dtype)
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    C = cache_len(cfg, seq_len)
+    st: dict[str, Any] = {}
+    if cfg.mixer in ("attn", "hymba"):
+        st["cache_k"] = jnp.zeros((L, batch, C, KV, hd), adt)
+        st["cache_v"] = jnp.zeros((L, batch, C, KV, hd), adt)
+    if cfg.mixer == "hymba":
+        st["ssm_h"] = jnp.zeros((L, batch, cfg.d_model, cfg.ssm_state),
+                                jnp.float32)
+    if cfg.mixer == "rwkv6":
+        H = cfg.d_model // rec_lib.RWKV_HEAD_DIM
+        st["prev_x"] = jnp.zeros((L, batch, cfg.d_model), adt)
+        st["S"] = jnp.zeros((L, batch, H, rec_lib.RWKV_HEAD_DIM,
+                             rec_lib.RWKV_HEAD_DIM), jnp.float32)
+        st["prev_x_c"] = jnp.zeros((L, batch, cfg.d_model), adt)
+    if cfg.mixer == "fourier":
+        st["ring"] = jnp.zeros((L, batch, cfg.fourier_taps, cfg.d_model), adt)
+    return st
+
+
+def decode_state_specs(cfg: ModelConfig) -> dict:
+    sp: dict[str, Any] = {}
+    if cfg.mixer in ("attn", "hymba"):
+        sp["cache_k"] = P(None, ("pod", "data"), None, None, TP)
+        sp["cache_v"] = P(None, ("pod", "data"), None, None, TP)
+    if cfg.mixer == "hymba":
+        sp["ssm_h"] = P(None, ("pod", "data"), TP, None)
+    if cfg.mixer == "rwkv6":
+        sp["prev_x"] = P(None, ("pod", "data"), TP)
+        sp["S"] = P(None, ("pod", "data"), TP, None, None)
+        sp["prev_x_c"] = P(None, ("pod", "data"), TP)
+    if cfg.mixer == "fourier":
+        sp["ring"] = P(None, ("pod", "data"), None, TP)
+    return sp
+
+
+def _block_decode(cfg: ModelConfig, p: dict, x: jax.Array, st: dict, *,
+                  pos: jax.Array, window: jax.Array,
+                  positions: Optional[jax.Array]):
+    """One block, one token. st holds this layer's slice (no leading L)."""
+    new_st = dict(st)
+    h = rms_norm(x, p["ln1"])
+    if cfg.mixer in ("attn", "hymba"):
+        y_attn, ck, cv = attn_lib.attention_decode(
+            p["attn"], h, cfg, cache_k=st["cache_k"], cache_v=st["cache_v"],
+            pos=pos, window=window, positions=positions)
+        new_st["cache_k"], new_st["cache_v"] = ck, cv
+    if cfg.mixer == "attn":
+        y = y_attn
+    elif cfg.mixer == "hymba":
+        y_ssm, hnew = rec_lib.ssm_mix(p["ssm"], h, state=st["ssm_h"])
+        new_st["ssm_h"] = hnew
+        y = 0.5 * (rms_norm(y_attn, p["ln_attn_out"])
+                   + rms_norm(y_ssm, p["ln_ssm_out"]))
+    elif cfg.mixer == "rwkv6":
+        state = {"prev_x": st["prev_x"], "S": st["S"]}
+        y, ns = rec_lib.rwkv_time_mix(p["rwkv_t"], h, state=state)
+        new_st["prev_x"], new_st["S"] = ns["prev_x"], ns["S"]
+    elif cfg.mixer == "fourier":
+        ring = st["ring"]
+        K = cfg.fourier_taps
+        slot = jnp.mod(pos, K)
+        ring = jax.lax.dynamic_update_slice(
+            ring, h.astype(ring.dtype)[:, :1], (0, slot, 0))
+        taps = p["fourier"]["taps"].astype(jnp.float32)      # (K, d)
+        cidx = jnp.arange(K)
+        lag = jnp.mod(slot - cidx, K)                        # age of slot
+        w = jnp.where(lag[:, None] <= pos, taps[lag], 0.0)
+        y = jnp.einsum("bkd,kd->bd", ring.astype(jnp.float32), w)[:, None]
+        gate = jax.nn.sigmoid(
+            (h @ p["fourier"]["gate"].astype(h.dtype)).astype(jnp.float32))
+        y = (y * gate).astype(x.dtype)
+        new_st["ring"] = ring
+    x = x + y
+    h2 = rms_norm(x, p["ln2"])
+    if cfg.mixer == "rwkv6":
+        y2, prev_c = rec_lib.rwkv_channel_mix(p["rwkv_c"], h2, st["prev_x_c"])
+        new_st["prev_x_c"] = prev_c
+    elif cfg.is_moe:
+        y2, _ = moe_lib.moe_ffn(p["moe"], h2, cfg)
+    else:
+        y2 = swiglu_mlp(p["mlp"], h2,
+                        reduce_dtype=jnp.bfloat16
+                        if cfg.reduce_dtype == "bfloat16" else None)
+    return x + y2, new_st
+
+
+def decode_step(cfg: ModelConfig, params: dict, state: dict,
+                token: jax.Array, pos: jax.Array, *,
+                positions: Optional[jax.Array] = None,
+                embed: Optional[jax.Array] = None):
+    """serve_step: one new token for the whole batch.
+
+    token: (B,) int32 (or embed (B, 1, d) for frontend archs); pos: scalar.
+    Returns (logits (B, vocab_padded), new_state).
+    """
+    adt = _dtype(cfg.dtype)
+    if cfg.frontend == "embeddings":
+        x = embed.astype(adt)
+    else:
+        x = params["embed"].astype(adt)[token][:, None]
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(adt)
+    windows = _layer_windows(cfg, cfg.max_seq_len)
+
+    def body(xc, inp):
+        p, w, st = inp
+        xn, st_new = _block_decode(cfg, p, xc, st, pos=pos, window=w,
+                                   positions=positions)
+        return xn, st_new
+
+    if cfg.scan_layers:
+        x, new_state = jax.lax.scan(body, x,
+                                    (params["blocks"], windows, state))
+    else:
+        new_states = []
+        for i in range(cfg.num_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["blocks"])
+            st_i = jax.tree.map(lambda a: a[i], state)
+            x, st_new = body(x, (p_i, windows[i], st_i))
+            new_states.append(st_new)
+        new_state = jax.tree.map(lambda *xs: jnp.stack(xs), *new_states)
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"].astype(adt))[:, 0]
+    return logits.astype(jnp.float32), new_state
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: Optional[jax.Array], *,
+            positions: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            cache_capacity: Optional[int] = None):
+    """Full-sequence forward returning (last_logits, decode_state).
+
+    cache_capacity: KV slots to allocate (>= S for full attention so decode
+    can append; defaults to the prefilled length)."""
+    logits, _, caches = forward(cfg, params, tokens, positions=positions,
+                                embeds=embeds, want_cache=True)
+    B = logits.shape[0]
+    S = (tokens if tokens is not None else embeds).shape[1]
+    state = init_decode_state(cfg, B, cache_capacity or S)
+    if cfg.mixer in ("attn", "hymba"):
+        k, v = caches[0], caches[1]                  # (L, B, S, KV, hd)
+        C = state["cache_k"].shape[2]
+        if C >= S:
+            # slots p % C == p for p < S <= C
+            state["cache_k"] = jax.lax.dynamic_update_slice(
+                state["cache_k"], k.astype(state["cache_k"].dtype),
+                (0, 0, 0, 0, 0))
+            state["cache_v"] = jax.lax.dynamic_update_slice(
+                state["cache_v"], v.astype(state["cache_v"].dtype),
+                (0, 0, 0, 0, 0))
+        else:
+            # ring: keep the last C; slots line up when S % C == 0
+            assert S % C == 0, (S, C)
+            state["cache_k"] = k[:, :, -C:].astype(state["cache_k"].dtype)
+            state["cache_v"] = v[:, :, -C:].astype(state["cache_v"].dtype)
+    if cfg.mixer == "hymba":
+        state["ssm_h"] = caches[2]
+    if cfg.mixer == "rwkv6":
+        state["prev_x"] = caches[0]
+        state["S"] = caches[1]
+        state["prev_x_c"] = caches[2]
+    if cfg.mixer == "fourier":
+        assert S % cfg.fourier_taps == 0 or S < cfg.fourier_taps, \
+            "fourier ring alignment needs S % taps == 0"
+        state["ring"] = caches[0].astype(state["ring"].dtype)
+    return logits[:, -1], state

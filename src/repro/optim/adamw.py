@@ -1,0 +1,155 @@
+"""AdamW with optional 8-bit (block-quantized) moments.
+
+Dependency-free (no optax). The int8 state path is the distributed-training
+memory trick that lets 405B-scale optimizer state fit the v5e HBM budget in
+the dry-run (DESIGN.md §6): m and v are stored int8 with a float scale per
+block of 128 along the last axis, dequantized on use, requantized after the
+update (error stays bounded because Adam moments are smooth EWMAs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"     # float32 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+BLOCK = 128
+
+
+def _quantize(x: jax.Array) -> dict:
+    """Blockwise symmetric int8 quantization along the last axis."""
+    if x.ndim == 0:
+        x = x.reshape(1)
+    shape = x.shape
+    last = shape[-1]
+    pad = (-last) % BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = x.reshape(*x.shape[:-1], x.shape[-1] // BLOCK, BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(xb / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32),
+            "orig_last": jnp.asarray(last)}
+
+
+def _dequantize(d: dict, last: int, scalar: bool = False) -> jax.Array:
+    x = d["q"].astype(jnp.float32) * d["scale"]
+    x = x.reshape(*x.shape[:-2], -1)
+    x = x[..., :last]
+    return x.reshape(()) if scalar else x
+
+
+def init_state(params: Any, cfg: OptConfig) -> dict:
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if cfg.state_dtype == "int8":
+            return _quantize(z)
+        return z
+    return {
+        "m": jax.tree.map(zero_like, params),
+        "v": jax.tree.map(zero_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    g = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * factor
+                                   ).astype(x.dtype), grads), g
+
+
+def apply(params: Any, grads: Any, state: dict, cfg: OptConfig
+          ) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    int8 = cfg.state_dtype == "int8"
+
+    def upd(p, g, m, v):
+        last = p.shape[-1] if p.ndim else 1
+        scalar = p.ndim == 0
+        gf = g.astype(jnp.float32)
+        mf = _dequantize(m, last, scalar) if int8 else m
+        vf = _dequantize(v, last, scalar) if int8 else v
+        mf = cfg.b1 * mf + (1 - cfg.b1) * gf
+        vf = cfg.b2 * vf + (1 - cfg.b2) * gf * gf
+        mhat = mf / b1c
+        vhat = vf / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # no decay on norms/scalars
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, (_quantize(mf) if int8 else mf,
+                      _quantize(vf) if int8 else vf)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    if int8:
+        # m/v leaves are dicts; flatten against the params treedef
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+    else:
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1][0] for o in out])
+    new_v = treedef.unflatten([o[1][1] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+def state_specs(param_specs: Any, cfg: OptConfig) -> dict:
+    """PartitionSpecs for the optimizer state mirroring the params' specs."""
+    from jax.sharding import PartitionSpec as P
+    is_spec = lambda x: isinstance(x, P)  # noqa: E731 (P is a tuple subclass)
+    if cfg.state_dtype == "int8":
+        def qspec(ps):
+            # quantize splits the last axis into (blocks, BLOCK=128): put
+            # the original last-axis sharding on the BLOCK axis (always
+            # divisible by the mesh axes) — the block-count axis (e.g.
+            # 6144/128 = 48) often isn't divisible by a 32-way fsdp axis.
+            parts = list(ps) if ps else []
+            last = parts[-1] if parts else None
+            lead = parts[:-1] if parts else []
+            return {"q": P(*lead, None, last), "scale": P(*lead, None, None),
+                    "orig_last": P()}
+        m = jax.tree.map(qspec, param_specs, is_leaf=is_spec)
+        return {"m": m, "v": m, "step": P()}
+    return {"m": param_specs, "v": param_specs, "step": P()}

@@ -1,0 +1,77 @@
+"""Train / serve step functions (pure, pjit-friendly).
+
+make_train_step builds: loss -> grads -> global-norm clip -> (optional int8
+error-feedback cross-pod gradient compression) -> AdamW update. The returned
+callable signature is step(params, opt_state, batch) -> (params, opt_state,
+metrics) and is what launch/train.py jits and launch/dryrun.py lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
+                    grad_transform: Optional[Callable] = None) -> Callable:
+    accum = max(1, cfg.grad_accum_steps)
+
+    def compute_grads(params, batch):
+        if accum == 1:
+            return jax.value_and_grad(
+                lambda p: lm.loss_fn(cfg, p, batch))(params)
+        mb = jax.tree.map(
+            lambda v: v.reshape(accum, v.shape[0] // accum, *v.shape[1:]),
+            batch)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def one(carry, b):
+            lsum, gsum = carry
+            l, g = jax.value_and_grad(
+                lambda p: lm.loss_fn(cfg, p, b))(params)
+            gsum = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32), gsum, g)
+            return (lsum + l, gsum), None
+
+        (lsum, gsum), _ = jax.lax.scan(one, (jnp.zeros(()), zeros), mb)
+        grads = jax.tree.map(lambda g: g / accum, gsum)
+        return lsum / accum, grads
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        grads, gnorm = adamw.clip_by_global_norm(grads, opt_cfg.grad_clip)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state = adamw.apply(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": adamw.lr_schedule(opt_cfg, opt_state["step"])}
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    def eval_step(params, batch):
+        return lm.loss_fn(cfg, params, batch)
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return lm.prefill(cfg, params, batch.get("tokens"),
+                          positions=batch.get("positions"),
+                          embeds=batch.get("embeds"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, state, token, pos, positions=None, embed=None):
+        return lm.decode_step(cfg, params, state, token, pos,
+                              positions=positions, embed=embed)
+    return decode_step

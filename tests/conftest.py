@@ -1,0 +1,43 @@
+"""Shared test utilities.
+
+NOTE: XLA_FLAGS / forced device counts are deliberately NOT set here — smoke
+tests and benchmarks must see the real single CPU device. Tests that need a
+multi-device mesh spawn a subprocess via ``run_in_subprocess_devices``.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_in_subprocess_devices(snippet: str, n_devices: int = 8,
+                              timeout: int = 600) -> str:
+    """Run ``snippet`` in a fresh python with n forced host devices.
+
+    The snippet should print results / raise on failure. Returns stdout.
+    """
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"
+        """) + textwrap.dedent(snippet)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={res.returncode})\n--- stdout ---\n"
+            f"{res.stdout}\n--- stderr ---\n{res.stderr[-4000:]}")
+    return res.stdout
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests on reduced configs (CPU, 1 device).
+
+Every assigned arch: (1) forward + loss + grad step produce finite values
+with the right shapes; (2) decode-with-cache is consistent with the
+full-sequence forward (prefill/decode parity) — a strong correctness check
+of KV-cache/ring/recurrent-state handling.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_MODULES, ASSIGNED, get_config
+from repro.models import lm
+
+ALL_ARCHS = ASSIGNED + ["fourierpim-lm"]
+
+
+def _batch_for(cfg, key, B=2, S=32):
+    ks = jax.random.split(key, 3)
+    batch = {}
+    tokens = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    if cfg.frontend == "embeddings":
+        batch["embeds"] = jax.random.normal(ks[2], (B, S, cfg.d_model),
+                                            jnp.float32) * 0.02
+        batch["tokens"] = None
+    else:
+        batch["tokens"] = tokens
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :, None],
+                               (B, S, 3))
+        batch["positions"] = pos
+    batch["labels"] = labels
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_and_grad_finite(arch):
+    cfg = get_config(arch).scaled_down()
+    key = jax.random.key(0)
+    params = lm.init_params(cfg, key)
+    batch = _batch_for(cfg, jax.random.key(1))
+
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: lm.loss_fn(cfg, p, batch)))(params)
+    assert np.isfinite(float(loss)), arch
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, np.float32))) for g in flat)
+    # logits shape
+    logits, aux, _ = jax.jit(
+        lambda p: lm.forward(cfg, p, batch.get("tokens"),
+                             positions=batch.get("positions"),
+                             embeds=batch.get("embeds")))(params)
+    B = 2
+    S = (batch["tokens"] if batch.get("tokens") is not None
+         else batch["embeds"]).shape[1]
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_parity(arch):
+    """decode_step(token_S | prefill(tokens[:S])) == forward(tokens[:S+1]).
+
+    Validates cache layout (incl. SWA rings), recurrent state carry, and
+    position handling for every mixer family.
+    """
+    cfg = get_config(arch).scaled_down()
+    if cfg.is_moe:
+        # capacity drops are data-dependent on group composition; a no-drop
+        # capacity factor (E/k) makes train/decode routing identical so the
+        # parity check is exact.
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=cfg.num_experts / cfg.experts_per_token)
+    B, S = 2, 64  # S == smoke window so ring slots line up
+    key = jax.random.key(0)
+    params = lm.init_params(cfg, key)
+    if cfg.frontend == "embeddings":
+        embeds = jax.random.normal(jax.random.key(1), (B, S + 1, cfg.d_model),
+                                   jnp.float32) * 0.02
+        tokens = None
+    else:
+        tokens = jax.random.randint(jax.random.key(1), (B, S + 1), 0,
+                                    cfg.vocab_size)
+        embeds = None
+    positions = None
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(
+            jnp.arange(S + 1, dtype=jnp.int32)[None, :, None], (B, S + 1, 3))
+
+    # ground truth: full forward on S+1 tokens
+    logits_full, _, _ = lm.forward(
+        cfg, params, tokens,
+        positions=positions,
+        embeds=embeds)
+    want = np.asarray(logits_full[:, -1], np.float32)
+
+    # prefill on S, then decode token S
+    pf_tokens = tokens[:, :S] if tokens is not None else None
+    pf_pos = positions[:, :S] if positions is not None else None
+    pf_emb = embeds[:, :S] if embeds is not None else None
+    last_logits, state = lm.prefill(cfg, params, pf_tokens,
+                                    positions=pf_pos, embeds=pf_emb,
+                                    cache_capacity=S + 1)
+    # prefill's last logits must equal forward at position S-1
+    np.testing.assert_allclose(
+        np.asarray(last_logits, np.float32),
+        np.asarray(logits_full[:, S - 1], np.float32), rtol=2e-3, atol=2e-3)
+
+    dec_pos = positions[:, S:S + 1] if positions is not None else None
+    dec_emb = embeds[:, S:S + 1] if embeds is not None else None
+    tok = tokens[:, S] if tokens is not None else None
+    got, _ = lm.decode_step(cfg, params, state, tok, jnp.int32(S),
+                            positions=dec_pos, embed=dec_emb)
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_param_counts_match_analytic():
+    for arch in ["qwen3-1.7b", "granite-moe-3b-a800m", "rwkv6-7b"]:
+        cfg = get_config(arch).scaled_down()
+        params = lm.init_params(cfg, jax.random.key(0))
+        actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        # analytic model ignores small vectors (biases, norms, mu, etc.)
+        assert abs(actual - analytic) / analytic < 0.25, (arch, actual,
+                                                          analytic)
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("mixtral-8x22b")
+    assert cfg.active_param_count() < cfg.param_count()
+    # mixtral: ~141B total, ~39B active (public figures) — sanity band
+    assert 1.0e11 < cfg.param_count() < 1.6e11
+    assert 3.0e10 < cfg.active_param_count() < 4.6e10
+
+
+def test_llama405b_param_count():
+    cfg = get_config("llama3-405b")
+    assert 3.8e11 < cfg.param_count() < 4.3e11, cfg.param_count()
