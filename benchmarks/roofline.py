@@ -27,6 +27,18 @@ HBM_BW = 819e9             # bytes/s per chip
 LINK_BW = 50e9             # bytes/s per ICI link
 
 
+def collective_term_from_ledger(led) -> float:
+    """Seconds on the ICI link for traffic recorded by the
+    ``repro.dist.collectives`` byte ledger — the shard_map code paths whose
+    HLO the dry-run artifacts don't capture. psum counted 2x
+    (reduce-scatter + all-gather halves), matching ``analyze``'s
+    all-reduce accounting."""
+    b = led.bytes_by_kind
+    nbytes = (b["all-gather"] + b["all-to-all"] + b["ppermute"]
+              + b["compressed-psum"] + 2 * b["psum"])
+    return nbytes / LINK_BW
+
+
 def model_flops_per_device(arch: str, shape_name: str, n_dev: int) -> float:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]

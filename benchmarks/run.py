@@ -7,16 +7,65 @@ Emits ``name,us_per_call,derived`` CSV rows.
   tpu_fft/*   — TPU-native kernel path (beyond-paper; wall-clock + roofline)
   roofline/*  — per (arch x shape) three-term roofline from the dry-run
                 artifacts (skipped if artifacts/dryrun is absent)
+
+``--smoke`` runs a minutes-scale subset (one PIM cell through the
+``repro.dist.batching`` scheduler, a tiny XLA FFT timing, and a
+ledger-accounted distributed-FFT trace) so CI catches perf-harness bitrot
+without paying for the full sweeps.
 """
 from __future__ import annotations
 
+import argparse
 import os
 
 
-def main() -> None:
+def smoke() -> None:
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks import roofline
+    from benchmarks.runlib import emit, time_jax
+    from repro.core import fft as F
+    from repro.core.fft import distributed as dfft
+    from repro.core.pim import FOURIERPIM_8, FP32
+    from repro.core.pim.fft_pim import batched_fft_stats
+    from repro.dist import collectives
+
+    # 1. PIM closed-form throughput through the crossbar-batch scheduler
+    #    (full wave + ragged batch so tail-wave utilization is exercised).
+    full_wave = batched_fft_stats(2048, None, FOURIERPIM_8, FP32)
+    arrays = full_wave["arrays_per_device"]
+    ragged = batched_fft_stats(2048, arrays + arrays // 2, FOURIERPIM_8, FP32)
+    for tag, stats in (("full", full_wave), ("ragged", ragged)):
+        emit(f"smoke/pim_fft/n=2048/{tag}", stats["latency_s"] * 1e6,
+             f"throughput={stats['throughput_per_s']:.3e}"
+             f";waves={stats['waves']}"
+             f";utilization={stats['utilization']:.2f}")
+
+    # 2. XLA FFT wall-clock at a reduced shape (structure check only).
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 1024))
+                    + 1j * rng.standard_normal((8, 1024)), jnp.complex64)
+    us = time_jax(jax.jit(lambda v: F.fft(v, backend="xla")), x)
+    emit("smoke/tpu_fft/n=1024", us, "backend=xla")
+
+    # 3. Distributed-FFT trace on a trivial mesh: the dist.collectives
+    #    ledger must see the all-to-alls and price them on the link.
+    mesh = jax.make_mesh((1,), ("model",))
+    spec = jax.ShapeDtypeStruct((2, 256), jnp.complex64)
+    with collectives.ledger() as led:
+        jax.jit(dfft.make_sharded_fft(mesh, batch_axes=())).lower(spec)
+    assert led.counts["all-to-all"] == 3, led.as_dict()
+    emit("smoke/dist_fft/n=256", 0.0,
+         f"a2a_bytes={led.bytes_by_kind['all-to-all']}"
+         f";t_collective_s={roofline.collective_term_from_ledger(led):.3e}")
+    print("smoke ok")
+
+
+def full() -> None:
     from benchmarks import (fft_pim_bench, polymul_pim_bench, roofline,
                             tpu_fft_bench)
-    print("name,us_per_call,derived")
     fft_pim_bench.run()
     polymul_pim_bench.run()
     tpu_fft_bench.run()
@@ -24,6 +73,19 @@ def main() -> None:
         roofline.run("singlepod")
     else:
         print("roofline/skipped,0,no artifacts (run repro.launch.dryrun)")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI subset (~seconds, asserts harness "
+                         "wiring instead of sweeping)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    if args.smoke:
+        smoke()
+    else:
+        full()
 
 
 if __name__ == "__main__":

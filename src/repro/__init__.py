@@ -1,0 +1,1 @@
+"""FourierPIM reproduction package (src layout; see ROADMAP.md)."""

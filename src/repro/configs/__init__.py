@@ -1,0 +1,1 @@
+"""Architecture configs + the (arch x shape) cell registry."""

@@ -20,9 +20,10 @@ all-to-all per transform in each direction. This mirrors the paper's
 cancellation of the FFT/IFFT input permutations across DFT.IDFT (§5), lifted
 to the collective level.
 
-All collectives are `jax.lax.all_to_all(tiled=True)` inside `shard_map`, so
-the dry-run HLO shows real all-to-all ops whose bytes the roofline
-accounting measures.
+All collectives go through `repro.dist.collectives.all_to_all(tiled=True)`
+inside `shard_map`, so the dry-run HLO shows real all-to-all ops AND the
+moved bytes land in the `dist.collectives` ledger the roofline accounting
+reads.
 """
 from __future__ import annotations
 
@@ -31,9 +32,10 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.dist import batching, collectives
+from repro.dist.compat import shard_map
 from repro.kernels import ops as kops
 
 
@@ -74,8 +76,8 @@ def fft_distributed(x: jax.Array, *, axis_name: str = "model",
         # With n1 = D each device holds exactly one j1 row: (..., 1, n2).
         m = x.reshape(*lead, 1, n2)
         # Step 1: transpose -> each device owns all j1 for a j2 slice.
-        m = jax.lax.all_to_all(m, axis_name, split_axis=len(lead) + 1,
-                               concat_axis=len(lead), tiled=True)
+        m = collectives.all_to_all(m, axis_name, split_axis=len(lead) + 1,
+                                   concat_axis=len(lead), tiled=True)
         # Now (..., n1, n2/D); axis -2 is full j1.
         y = _local_fft(jnp.swapaxes(m, -1, -2), inverse=False, backend=backend)
         y = jnp.swapaxes(y, -1, -2)  # (..., n1=k1, n2/D)
@@ -88,8 +90,8 @@ def fft_distributed(x: jax.Array, *, axis_name: str = "model",
         phase = (jnp.cos(ang) + 1j * jnp.sin(ang))[:, None]
         y = y * (tw * phase)
         # Step 4: transpose -> each device owns all j2 for a k1 slice.
-        y = jax.lax.all_to_all(y, axis_name, split_axis=len(lead),
-                               concat_axis=len(lead) + 1, tiled=True)
+        y = collectives.all_to_all(y, axis_name, split_axis=len(lead),
+                                   concat_axis=len(lead) + 1, tiled=True)
         # (..., n1/D=1? no: split k1 (axis -2) across D, concat j2: (..., 1, n2))
         z = _local_fft(y.reshape(*lead, n2), inverse=False, backend=backend)
         z = z.reshape(*lead, 1, n2)
@@ -97,8 +99,8 @@ def fft_distributed(x: jax.Array, *, axis_name: str = "model",
             return z.reshape(*lead, n_loc)  # Z-order: k1-sharded, k2 local
         # Step 7: Z[k1, k2] -> natural order X[k1 + k2 n1], outer digit k2
         # sharded: transpose once more.
-        z = jax.lax.all_to_all(z, axis_name, split_axis=len(lead) + 1,
-                               concat_axis=len(lead), tiled=True)
+        z = collectives.all_to_all(z, axis_name, split_axis=len(lead) + 1,
+                                   concat_axis=len(lead), tiled=True)
         # (..., D, n2/D) rows k1 full? After split of k2-axis: each device has
         # Z[k1 all? ...]. Layout: (..., n1, n2/D) with j2 slice owned.
         z = jnp.swapaxes(z, -1, -2)  # (..., n2/D, n1): [k2_local, k1]
@@ -109,8 +111,8 @@ def fft_distributed(x: jax.Array, *, axis_name: str = "model",
             # natural X sharded by outer k2 chunk: (..., n2/D, n1) view
             z = x.reshape(*lead, n2 // D, n1)
             z = jnp.swapaxes(z, -1, -2)  # (..., n1, n2/D)
-            z = jax.lax.all_to_all(z, axis_name, split_axis=len(lead),
-                                   concat_axis=len(lead) + 1, tiled=True)
+            z = collectives.all_to_all(z, axis_name, split_axis=len(lead),
+                                       concat_axis=len(lead) + 1, tiled=True)
             # (..., 1, n2): one k1 row, all k2
             z = z.reshape(*lead, n2)
         else:
@@ -119,8 +121,8 @@ def fft_distributed(x: jax.Array, *, axis_name: str = "model",
         y = _local_fft(z, inverse=True, backend=backend)
         y = y.reshape(*lead, 1, n2)
         # Undo step 4.
-        y = jax.lax.all_to_all(y, axis_name, split_axis=len(lead) + 1,
-                               concat_axis=len(lead), tiled=True)
+        y = collectives.all_to_all(y, axis_name, split_axis=len(lead) + 1,
+                                   concat_axis=len(lead), tiled=True)
         # (..., n1, n2/D): all k1 for a j2 slice. Undo twiddle (conjugate).
         tw = _twiddle(n, n1, n2, 0, n2 // D, inverse=True)
         k1 = jnp.arange(n1, dtype=jnp.float32)
@@ -131,8 +133,8 @@ def fft_distributed(x: jax.Array, *, axis_name: str = "model",
         m = _local_fft(jnp.swapaxes(y, -1, -2), inverse=True, backend=backend)
         m = jnp.swapaxes(m, -1, -2)
         # Undo step 1 transpose.
-        m = jax.lax.all_to_all(m, axis_name, split_axis=len(lead),
-                               concat_axis=len(lead) + 1, tiled=True)
+        m = collectives.all_to_all(m, axis_name, split_axis=len(lead),
+                                   concat_axis=len(lead) + 1, tiled=True)
         return m.reshape(*lead, n_loc)
 
 
@@ -174,3 +176,15 @@ def make_sharded_polymul(mesh: jax.sharding.Mesh, *, axis_name: str = "model",
 
     return shard_map(local_fn, mesh=mesh, in_specs=(spec, spec),
                      out_specs=spec, check_vma=False)
+
+
+def batch_plan(mesh: jax.sharding.Mesh, batch: int, *,
+               batch_axes: Sequence[str] = ("pod", "data"),
+               transforms_per_device: int = 1) -> batching.CrossbarBatchPlan:
+    """Map B transforms onto the mesh's batch axes (paper-§6 batching lifted
+    to the pod level): per-device share, wave count, and the utilization the
+    tail wave / mesh padding costs. ``transforms_per_device`` is how many
+    transforms one device runs concurrently (1 for the XLA path)."""
+    return batching.plan_crossbar_batch(
+        batch, num_arrays=transforms_per_device, mesh=mesh,
+        axes=tuple(batch_axes))

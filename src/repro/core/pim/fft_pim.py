@@ -229,6 +229,37 @@ def fft_throughput_per_s(n: int, cfg: PIMConfig, spec: aritpim.FloatSpec
     return cfg.batch_capacity(n, word) * cfg.concurrency / lat
 
 
+def batched_fft_stats(n: int, batch: int | None, cfg: PIMConfig,
+                      spec: aritpim.FloatSpec, *, mesh=None) -> dict:
+    """Schedule a batch of B n-point FFTs onto the crossbar arrays (and,
+    when ``mesh`` is given, across its (pod, data) axes first) via
+    ``repro.dist.batching``; report waves, per-array utilization, end-to-end
+    latency and achieved throughput.
+
+    At ``batch == num_arrays`` (one full wave) the achieved throughput
+    equals ``fft_throughput_per_s`` — the paper's §6 steady-state; smaller
+    or non-dividing batches surface the idle-array cost instead of silently
+    assuming perfect packing.
+    """
+    from repro.dist import batching
+    word = aritpim.complex_word_bits(spec)
+    num_arrays = max(1, int(cfg.batch_capacity(n, word) * cfg.concurrency))
+    if batch is None:        # one full wave everywhere: the steady state
+        n_dev = (batching.shard_batch(0, mesh).n_devices
+                 if mesh is not None else 1)
+        batch = num_arrays * n_dev
+    plan = batching.plan_crossbar_batch(batch, num_arrays=num_arrays,
+                                        mesh=mesh)
+    wave_latency_s = fft_latency_cycles(n, cfg, spec) / cfg.clock_hz
+    return {
+        **plan.report(),
+        "n": n,
+        "wave_latency_s": wave_latency_s,
+        "latency_s": plan.latency(wave_latency_s),
+        "throughput_per_s": plan.throughput(wave_latency_s),
+    }
+
+
 def fft_energy_j_per_op(n: int, cfg: PIMConfig, spec: aritpim.FloatSpec
                         ) -> float:
     """Energy per FFT: gate executions dominate; derived from the simulator

@@ -1,0 +1,1 @@
+"""Synthetic-data pipeline (deterministic, host-shardable)."""

@@ -1,0 +1,10 @@
+"""Distribution subsystem: logical-axis sharding, byte-accounted
+collectives, and the crossbar-batch scheduler.
+
+Layout (see docs/distributed.md):
+  compat      version shims over jax mesh / shard_map API drift
+  sharding    ``constrain`` + the registerable logical->mesh axis-rules table
+  collectives error-feedback compressed psum, byte-ledger wrappers
+  batching    paper-§6 batch-over-arrays scheduling on crossbars and meshes
+"""
+from repro.dist import batching, collectives, compat, sharding  # noqa: F401

@@ -1,0 +1,188 @@
+"""Collectives with byte accounting + error-feedback compressed psum.
+
+Two things live here:
+
+* Thin wrappers over ``jax.lax`` collectives (``psum``, ``all_gather``,
+  ``all_to_all``, ``ppermute``) that record moved bytes into a trace-time
+  ledger. ``benchmarks/roofline.py`` folds the ledger into its collective
+  term for code paths (shard_map kernels) whose HLO isn't captured by the
+  dry-run artifacts. Byte counts are recorded once per *trace*, so a jitted
+  step contributes its per-call bytes exactly once.
+
+* ``compressed_psum_leaf``: the cross-pod gradient reduction. Each device
+  adds its carried residual to the leaf, quantizes to int8 with one f32
+  scale per leaf, exchanges the int8 payload + scales (4x fewer wire bytes
+  than an f32 ring all-reduce), dequantizes, and returns the *mean* across
+  the axis plus the new residual (what quantization dropped). The residual
+  is fed back on the next step, so the quantization error is carried, not
+  lost (error-feedback / EF-SGD style).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("psum", "all-gather", "all-to-all", "ppermute", "compressed-psum")
+
+
+# ---------------------------------------------------------------------------
+# Byte ledger
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Ledger:
+    """Accumulated collective traffic, by kind, in result-bytes per device
+    (the same accounting unit as ``launch.dryrun.collective_bytes``)."""
+    bytes_by_kind: dict = dataclasses.field(
+        default_factory=lambda: dict.fromkeys(KINDS, 0))
+    counts: dict = dataclasses.field(
+        default_factory=lambda: dict.fromkeys(KINDS, 0))
+
+    def record(self, kind: str, nbytes: int) -> None:
+        self.bytes_by_kind[kind] += int(nbytes)
+        self.counts[kind] += 1
+
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def as_dict(self) -> dict:
+        return {"bytes": dict(self.bytes_by_kind),
+                "counts": dict(self.counts),
+                "total_bytes": self.total_bytes()}
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.stack: list[Ledger] = []
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def ledger():
+    """Collect byte counts from every wrapper traced inside the block."""
+    led = Ledger()
+    _STATE.stack.append(led)
+    try:
+        yield led
+    finally:
+        _STATE.stack.pop()
+
+
+def _nbytes(x) -> int:
+    shape = getattr(x, "shape", ())
+    dtype = getattr(x, "dtype", None)
+    itemsize = np.dtype(dtype).itemsize if dtype is not None else 4
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n * itemsize
+
+
+def _record(kind: str, nbytes: int) -> None:
+    if _STATE.stack:
+        _STATE.stack[-1].record(kind, nbytes)
+
+
+def _axis_size(axis_name: str) -> int | None:
+    """Static size of a shard_map/pmap axis at trace time, if resolvable."""
+    try:
+        return int(jax.lax.psum(1, axis_name))
+    except Exception:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Plain wrappers (byte-accounted)
+# ---------------------------------------------------------------------------
+
+def psum(x: jax.Array, axis_name: str) -> jax.Array:
+    _record("psum", _nbytes(x))
+    return jax.lax.psum(x, axis_name)
+
+
+def pmean(x: jax.Array, axis_name: str) -> jax.Array:
+    _record("psum", _nbytes(x))
+    return jax.lax.pmean(x, axis_name)
+
+
+def all_to_all(x: jax.Array, axis_name: str, split_axis: int,
+               concat_axis: int, *, tiled: bool = True) -> jax.Array:
+    _record("all-to-all", _nbytes(x))
+    return jax.lax.all_to_all(x, axis_name, split_axis, concat_axis,
+                              tiled=tiled)
+
+
+def all_gather(x: jax.Array, axis_name: str, *, axis: int = 0,
+               tiled: bool = False) -> jax.Array:
+    d = _axis_size(axis_name) or 1
+    _record("all-gather", _nbytes(x) * d)
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
+
+
+def ppermute(x: jax.Array, axis_name: str, perm) -> jax.Array:
+    _record("ppermute", _nbytes(x))
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback compressed psum
+# ---------------------------------------------------------------------------
+
+def _quantize_leaf(c: jax.Array):
+    """(int8 payload, f32 scale) with one scale per leaf."""
+    scale = jnp.maximum(jnp.max(jnp.abs(c)), jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(c / scale * 127.0), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * (scale / 127.0)
+
+
+def compressed_psum_leaf(grad: jax.Array, err: jax.Array, axis_name: str
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Mean-reduce one gradient leaf across ``axis_name`` in int8.
+
+    Must be called inside ``shard_map``/``pmap``. Returns
+    ``(mean_across_axis, new_residual)``; the caller carries the residual
+    into the next call's ``err``. The reduced mean is identical on every
+    device; the residual is device-local.
+    """
+    compensated = grad.astype(jnp.float32) + err.astype(jnp.float32)
+    q, scale = _quantize_leaf(compensated)
+    deq = _dequantize_leaf(q, scale)
+    new_err = compensated - deq
+
+    d = _axis_size(axis_name)
+    # Wire format: int8 payload + one f32 scale per device.
+    _record("compressed-psum", (_nbytes(q) + 4) * (d or 1))
+    qs = jax.lax.all_gather(q, axis_name)            # (D, *leaf)
+    scales = jax.lax.all_gather(scale, axis_name)    # (D,)
+    bshape = (scales.shape[0],) + (1,) * grad.ndim
+    deq_all = qs.astype(jnp.float32) * (scales.reshape(bshape) / 127.0)
+    red = jnp.mean(deq_all, axis=0).astype(grad.dtype)
+    return red, new_err.astype(grad.dtype)
+
+
+def compressed_psum(grads, errs, axis_name: str):
+    """Tree-mapped ``compressed_psum_leaf`` over a gradient pytree."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errs)
+    out = [compressed_psum_leaf(g, e, axis_name)
+           for g, e in zip(flat_g, flat_e)]
+    red = treedef.unflatten([r for r, _ in out])
+    new_err = treedef.unflatten([e for _, e in out])
+    return red, new_err
+
+
+def zeros_like_errs(grads):
+    """Initial (all-zero) error-feedback residual tree for ``grads``."""
+    return jax.tree.map(jnp.zeros_like, grads)

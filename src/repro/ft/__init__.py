@@ -1,0 +1,1 @@
+"""Fault tolerance: atomic/elastic checkpointing, step watchdog."""

@@ -27,7 +27,10 @@ _STEP_RE = re.compile(r"^step_(\d+)$")
 
 
 def _flatten_with_paths(tree: Any):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path is newer jax; tree_util spells it on 0.4.x
+    flatten = getattr(jax.tree, "flatten_with_path",
+                      jax.tree_util.tree_flatten_with_path)
+    flat, treedef = flatten(tree)
     out = []
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

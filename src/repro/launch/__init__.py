@@ -1,0 +1,1 @@
+"""Launch layer: meshes, dry-run, train/serve drivers."""

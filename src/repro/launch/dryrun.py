@@ -15,7 +15,6 @@ ShapeDtypeStructs and compilation is AOT.
 """
 import argparse
 import dataclasses
-import functools
 import json
 import re
 import time
@@ -27,6 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import (ASSIGNED, SHAPES, cell_supported,
                                     get_config)
+from repro.dist import compat
 from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
@@ -63,6 +63,15 @@ def collective_bytes(hlo_text: str) -> dict:
     return out
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() as a flat dict (older jax returns a
+    one-entry list of per-program dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _lower_cell(cfg, shape, mesh):
     """Build abstract inputs + shardings for a cell and lower it."""
     params_abs = lm.abstract_params(cfg)
@@ -70,7 +79,7 @@ def _lower_cell(cfg, shape, mesh):
     psh = jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs,
                        is_leaf=lambda x: isinstance(x, P))
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             opt_cfg = S.opt_config_for(cfg)
             opt_abs = S.abstract_opt_state(cfg, opt_cfg)
@@ -114,11 +123,9 @@ def _lower_cell(cfg, shape, mesh):
                 dsp["positions"], dsds["positions"].shape, mesh))
                 if "positions" in dsds else None)
 
-            cfg_long = cfg
-            fn = step_lib.make_decode_step(cfg_long)
-            kw_sh = {}
+            fn = step_lib.make_decode_step(cfg)
             jfn = jax.jit(
-                functools.partial(fn),
+                fn,
                 in_shardings=(psh, ssh, tok_sh,
                               NamedSharding(mesh, P()), pos_stream_sh,
                               emb_sh),
@@ -155,7 +162,7 @@ def _cost_probe(cfg, shape, mesh) -> dict | None:
             attn_kv_block=shape.seq_len)
         lowered = _lower_cell(cfg_p, shape, mesh)
         compiled = lowered.compile()
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_dict(compiled)
         coll = collective_bytes(compiled.as_text())
         vals[L] = {"flops": ca.get("flops", 0.0),
                    "bytes": ca.get("bytes accessed", 0.0),
@@ -195,7 +202,7 @@ def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
                 "reason": reason}
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = _lower_cell(cfg, shape, mesh)
         t_lower = time.time() - t0
         t0 = time.time()
@@ -203,7 +210,7 @@ def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
         t_compile = time.time() - t0
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     n_dev = mesh.size
@@ -227,7 +234,7 @@ def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
     }
     if probe:
         try:
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 pr = _cost_probe(cfg, shape, mesh)
             if pr is not None:
                 result["probe"] = pr

@@ -1,11 +1,13 @@
 """Production mesh construction (multi-pod dry-run contract).
 
 A FUNCTION, not a module-level constant: importing this module never
-touches jax device state.
+touches jax device state. Mesh creation goes through ``repro.dist.compat``
+so axis types are requested on jax versions that have them and elided on
+ones that don't.
 """
 from __future__ import annotations
 
-import jax
+from repro.dist import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,12 +16,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     (pod, data) so parameter shards scale with the installation)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes,
+                            axis_types=compat.axis_types_auto(len(axes)))
 
 
 def make_dev_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for tests on forced-host-device subprocesses."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((n_data, n_model), ("data", "model"),
+                            axis_types=compat.axis_types_auto(2))

@@ -16,6 +16,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import ShapeSpec
+from repro.dist.sharding import sanitize_spec  # noqa: F401  (re-export)
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim import adamw
@@ -23,35 +24,6 @@ from repro.optim import adamw
 SDS = jax.ShapeDtypeStruct
 
 DP = ("pod", "data")
-
-
-def sanitize_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
-    """Drop axes that don't exist in the mesh or don't divide the dim."""
-    entries = list(spec) + [None] * (len(shape) - len(spec))
-    out = []
-    for dim, entry in zip(shape, entries):
-        if entry is None:
-            out.append(None)
-            continue
-        axes = entry if isinstance(entry, tuple) else (entry,)
-        # skip absent axes; keep the longest dividing prefix of the rest
-        kept = []
-        prod = 1
-        for a in axes:
-            if a not in mesh.shape:
-                continue
-            if dim % (prod * mesh.shape[a]) == 0:
-                kept.append(a)
-                prod *= mesh.shape[a]
-            else:
-                break
-        if not kept:
-            out.append(None)
-        elif len(kept) == 1:
-            out.append(kept[0])
-        else:
-            out.append(tuple(kept))
-    return P(*out)
 
 
 def sanitize_tree(specs: Any, shapes: Any, mesh: Mesh) -> Any:

@@ -8,24 +8,38 @@ synthetic data, optional cross-pod gradient compression.
 Example (a few hundred steps of a ~10M-param qwen3-family model on CPU):
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
       --steps 300 --ckpt-dir /tmp/ckpt
+
+With ``--mesh DxM`` (e.g. under forced host devices) the run enters a
+``repro.dist`` mesh context: the model's ``constrain`` annotations become
+real sharding constraints and the batch is device_put over the data axis.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.configs.registry import get_config
 from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.dist import batching, compat, sharding
 from repro.ft import checkpoint as ckpt_lib
 from repro.ft.watchdog import StepWatchdog
+from repro.launch.mesh import make_dev_mesh
 from repro.models import lm
 from repro.optim import adamw
 from repro.train import step as step_lib
+
+
+def _batch_sharding(mesh, v):
+    spec = sharding.logical_to_spec(
+        ("batch",) + (None,) * (v.ndim - 1), v.shape, mesh)
+    return NamedSharding(mesh, spec)
 
 
 def main(argv=None):
@@ -41,7 +55,31 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="enter a (data, model) dev-mesh context, e.g. 2x4")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.mesh:
+        try:
+            n_data, n_model = (int(v) for v in args.mesh.lower().split("x"))
+        except ValueError:
+            ap.error(f"--mesh wants DxM (e.g. 2x4), got {args.mesh!r}")
+        mesh = make_dev_mesh(n_data, n_model)
+        if args.batch % n_data:
+            # constrain would silently drop the non-dividing data axis and
+            # replicate the batch; refuse rather than pretend to shard
+            ap.error(f"--batch {args.batch} must divide the data axis "
+                     f"({n_data})")
+        plan = batching.shard_batch(args.batch, mesh, axes=("data",))
+        print(f"[train] mesh={dict(mesh.shape)} per-device batch="
+              f"{plan.per_device} utilization={plan.utilization:.2f}")
+    with compat.set_mesh(mesh) if mesh is not None \
+            else contextlib.nullcontext():
+        return _run(args, mesh)
+
+
+def _run(args, mesh):
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -73,6 +111,7 @@ def main(argv=None):
                          donate_argnums=(0, 1))
 
     losses = []
+    batch_shardings: dict = {}
     t_start = time.time()
     try:
         for step in range(start_step, args.steps):
@@ -90,6 +129,12 @@ def main(argv=None):
                 B, S = batch["labels"].shape
                 batch["positions"] = jnp.broadcast_to(
                     jnp.arange(S, dtype=jnp.int32)[None, :, None], (B, S, 3))
+            if mesh is not None and mesh.size > 1:
+                for k, v in batch.items():  # shapes are fixed across steps
+                    if k not in batch_shardings:
+                        batch_shardings[k] = _batch_sharding(mesh, v)
+                batch = {k: jax.device_put(v, batch_shardings[k])
+                         for k, v in batch.items()}
             watchdog.start_step()
             params, opt_state, metrics = train_step(params, opt_state, batch)
             jax.block_until_ready(metrics["loss"])

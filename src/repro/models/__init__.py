@@ -1,0 +1,1 @@
+"""LM assembly over the layer zoo."""

@@ -1,0 +1,1 @@
+"""Layer zoo: attention, recurrent, MoE, common primitives."""

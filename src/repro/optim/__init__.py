@@ -1,0 +1,1 @@
+"""Optimizers (AdamW with optional int8 moments)."""

@@ -1,0 +1,1 @@
+"""Train/prefill/decode step builders."""

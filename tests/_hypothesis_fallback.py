@@ -1,0 +1,81 @@
+"""Deterministic mini-fallback for the slice of the hypothesis API this
+suite uses, for toolchains where the real library isn't installed.
+
+``conftest.py`` registers this module as ``hypothesis`` only when the real
+one is missing (CI installs the real thing; the pinned container may not).
+Property tests then still *run* — each ``@given`` test is executed
+``max_examples`` times with samples drawn from a per-test seeded PRNG — they
+just lose hypothesis's shrinking and example database. Supported surface:
+``given(**kwargs)``, ``settings(max_examples=, deadline=)``, and the
+``integers`` / ``floats`` / ``sampled_from`` strategies.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value=0, max_value=2**31 - 1):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.sampled_from = sampled_from
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    for k, s in strats.items():
+        if not isinstance(s, _Strategy):
+            raise TypeError(f"unsupported strategy for {k!r}: {s!r}")
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            # per-test deterministic stream, stable across runs/processes
+            rng = random.Random(zlib.adler32(fn.__qualname__.encode()))
+            for i in range(n):
+                draw = {k: s.draw(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **kwargs, **draw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (#{i + 1}): {draw}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # hide the drawn params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        return wrapper
+    return deco

@@ -15,6 +15,13 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pinned toolchain: run property tests on the fallback
+    import _hypothesis_fallback as _hf
+    sys.modules["hypothesis"] = _hf  # type: ignore[assignment]
+    sys.modules["hypothesis.strategies"] = _hf.strategies
+
 
 def run_in_subprocess_devices(snippet: str, n_devices: int = 8,
                               timeout: int = 600) -> str:

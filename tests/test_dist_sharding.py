@@ -1,0 +1,241 @@
+"""repro.dist tests: constrain round-trips under a dev mesh, no-op without
+a mesh, unknown-axis rejection, rules-table registration, crossbar-batch
+scheduling, and the collective byte ledger."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from conftest import run_in_subprocess_devices
+from repro.dist import batching, collectives, sharding
+
+
+# ---------------------------------------------------------------------------
+# constrain: validation + no-mesh behavior (in-process, single device)
+# ---------------------------------------------------------------------------
+
+def test_constrain_noop_without_mesh():
+    x = jnp.arange(12.0).reshape(3, 4)
+    y = sharding.constrain(x, "batch", "model")
+    assert y is x  # identity, not a copy: nothing to constrain against
+    # and under jit it traces fine
+    z = jax.jit(lambda v: sharding.constrain(v, "batch", None))(x)
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(x))
+
+
+def test_constrain_rejects_unknown_logical_axis():
+    x = jnp.zeros((2, 2))
+    with pytest.raises(ValueError, match="unknown logical axis"):
+        sharding.constrain(x, "bogus", None)
+    with pytest.raises(ValueError, match="unknown logical axis"):
+        sharding.logical_to_spec(("bogus", None), (2, 2), None)
+
+
+def test_constrain_rejects_rank_mismatch():
+    with pytest.raises(ValueError, match="rank"):
+        sharding.constrain(jnp.zeros((2, 2)), "batch")
+
+
+def test_rules_table_register_and_reset():
+    try:
+        sharding.register_rule("rows", "data")
+        assert sharding.current_rules()["rows"] == ("data",)
+        # now valid (still a no-op without a mesh)
+        x = jnp.zeros((4,))
+        assert sharding.constrain(x, "rows") is x
+    finally:
+        sharding.reset_rules()
+    assert "rows" not in sharding.current_rules()
+    with pytest.raises(ValueError):
+        sharding.constrain(jnp.zeros((4,)), "rows")
+
+
+def test_axis_rules_context_restores():
+    before = sharding.current_rules()
+    with sharding.axis_rules({"sp": ("data",)}):
+        assert sharding.current_rules()["sp"] == ("data",)
+    assert sharding.current_rules() == before
+    with sharding.axis_rules({"only": ("model",)}, extend=False):
+        assert set(sharding.current_rules()) == {"only"}
+    assert sharding.current_rules() == before
+
+
+# ---------------------------------------------------------------------------
+# constrain under a real dev mesh (subprocess, 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+def test_constrain_roundtrips_specs_under_dev_mesh():
+    out = run_in_subprocess_devices("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.dist import sharding
+from repro.launch.mesh import make_dev_mesh
+
+mesh = make_dev_mesh(2, 4)
+
+def check(shape, logical, want_spec):
+    x = jnp.zeros(shape)
+    with sharding.use_mesh(mesh):
+        spec = sharding.logical_to_spec(logical, shape, mesh)
+        assert spec == want_spec, (logical, spec, want_spec)
+        y = jax.jit(lambda v: sharding.constrain(v, *logical))(x)
+    want = NamedSharding(mesh, want_spec)
+    assert y.sharding.is_equivalent_to(want, len(shape)), (
+        logical, y.sharding, want)
+
+# batch -> (pod, data): pod absent on the dev mesh, data kept
+check((8, 32, 64), ("batch", None, "model"), P("data", None, "model"))
+# sp rides the model axis
+check((8, 32), ("batch", "sp"), P("data", "model"))
+# non-dividing dim: model (4) does not divide 30 -> dropped
+check((8, 30), ("batch", "model"), P("data", None))
+# all rules resolve to absent axes -> spec degrades to fully-None and
+# constrain skips the constraint entirely (identity)
+with sharding.use_mesh(mesh):
+    assert sharding.logical_to_spec(("pod", None), (8, 8), mesh) == P(None, None)
+    x = jnp.zeros((8, 8))
+    assert sharding.constrain(x, "pod", None) is x
+# registered override takes effect inside the context
+with sharding.axis_rules({"sp": ("data",)}):
+    check((32, 8), (None, "sp"), P(None, "data"))
+print("OK")
+""", n_devices=8)
+    assert "OK" in out
+
+
+def test_constrain_noop_on_trivial_mesh_inside_context():
+    # a 1-device mesh is a no-op too (nothing to partition)
+    mesh = jax.make_mesh((1,), ("data",))
+    x = jnp.zeros((4,))
+    with sharding.use_mesh(mesh):
+        assert sharding.constrain(x, "batch") is x
+
+
+# ---------------------------------------------------------------------------
+# Crossbar-batch scheduler
+# ---------------------------------------------------------------------------
+
+def test_schedule_waves_math():
+    ws = batching.schedule_waves(10, 4)
+    assert (ws.waves, ws.tail) == (3, 2)
+    assert ws.wave_sizes == (4, 4, 2)
+    assert ws.utilization == pytest.approx(10 / 12)
+    assert ws.latency(2.0) == 6.0
+    assert ws.throughput(2.0) == pytest.approx(10 / 6.0)
+    full = batching.schedule_waves(8, 4)
+    assert full.utilization == 1.0 and full.waves == 2
+    assert batching.schedule_waves(0, 4).waves == 0
+
+
+def test_plan_crossbar_batch_without_mesh():
+    plan = batching.plan_crossbar_batch(100, num_arrays=32)
+    assert plan.waves == 4
+    assert plan.utilization == pytest.approx(100 / (4 * 32))
+    rep = plan.report()
+    assert rep["n_devices"] == 1 and rep["tail"] == 4
+
+
+def test_plan_crossbar_batch_on_mesh():
+    mesh = jax.make_mesh((1,), ("data",))
+    plan = batching.plan_crossbar_batch(7, num_arrays=2, mesh=mesh)
+    # pod axis absent -> only data used; 7 over 2 arrays = 4 waves, tail 1
+    assert plan.mesh_plan.axes == ("data",)
+    assert plan.waves == 4 and plan.wave.tail == 1
+    assert plan.throughput(1.0) == pytest.approx(7 / 4)
+
+
+def test_pim_batched_stats_consistent_with_closed_form():
+    from repro.core.pim import FOURIERPIM_8, FP32, fft_throughput_per_s
+    from repro.core.pim.fft_pim import batched_fft_stats
+    from repro.core.pim.device_model import FULL_COMPLEX_BITS
+    n = 2048
+    arrays = int(FOURIERPIM_8.batch_capacity(n, FULL_COMPLEX_BITS)
+                 * FOURIERPIM_8.concurrency)
+    stats = batched_fft_stats(n, arrays, FOURIERPIM_8, FP32)
+    # one full wave == the paper's steady-state throughput
+    assert stats["waves"] == 1 and stats["utilization"] == 1.0
+    assert stats["throughput_per_s"] == pytest.approx(
+        fft_throughput_per_s(n, FOURIERPIM_8, FP32), rel=0.01)
+    # a half-filled second wave halves utilization, not throughput math
+    stats2 = batched_fft_stats(n, arrays + arrays // 2, FOURIERPIM_8, FP32)
+    assert stats2["waves"] == 2
+    assert stats2["utilization"] == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# Collective byte ledger
+# ---------------------------------------------------------------------------
+
+def test_ledger_records_wrapper_bytes():
+    from repro.dist import compat
+    mesh = jax.make_mesh((1,), ("data",))
+    x = jnp.zeros((4, 8), jnp.float32)
+
+    def f(v):
+        v = collectives.psum(v, "data")
+        v = collectives.all_to_all(v, "data", split_axis=1, concat_axis=0,
+                                   tiled=True)
+        return v
+
+    fn = compat.shard_map(f, mesh=mesh,
+                          in_specs=(jax.sharding.PartitionSpec("data"),),
+                          out_specs=jax.sharding.PartitionSpec("data"),
+                          check_vma=False)
+    with collectives.ledger() as led:
+        jax.jit(fn).lower(x)  # bytes are recorded at trace time
+    assert led.bytes_by_kind["psum"] == 4 * 8 * 4
+    assert led.bytes_by_kind["all-to-all"] == 4 * 8 * 4
+    assert led.counts["psum"] == 1 and led.counts["all-to-all"] == 1
+    assert led.total_bytes() == 2 * 4 * 8 * 4
+    # outside the context nothing records
+    jax.jit(fn).lower(x)
+    assert led.total_bytes() == 2 * 4 * 8 * 4
+
+
+def test_distributed_fft_traffic_lands_in_ledger():
+    out = run_in_subprocess_devices("""
+import jax, jax.numpy as jnp
+from repro.core.fft import distributed as dfft
+from repro.dist import collectives
+from repro.launch.mesh import make_dev_mesh
+
+mesh = make_dev_mesh(2, 4)
+x = jnp.zeros((4, 256), jnp.complex64)
+with collectives.ledger() as led:
+    jax.jit(dfft.make_sharded_fft(mesh)).lower(x)
+# ordered forward transform = 3 all-to-all transposes of the local block,
+# each moving the per-device (batch 4/2, seq 256/4) complex64 tile
+assert led.counts["all-to-all"] == 3, led.counts
+assert led.bytes_by_kind["all-to-all"] == 3 * 2 * 64 * 8, led.as_dict()
+print("OK")
+""", n_devices=8)
+    assert "OK" in out
+
+
+def test_compressed_psum_leaf_single_axis_shapes():
+    from repro.dist import compat
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("pod",))
+    g = jnp.asarray(np.random.default_rng(1).standard_normal((64,)),
+                    jnp.float32)
+
+    def f(gl, el):
+        red, err = collectives.compressed_psum_leaf(gl, el, "pod")
+        return red, err
+
+    fn = compat.shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                          out_specs=(P(), P()), check_vma=False)
+    red, err = jax.jit(fn)(g, jnp.zeros_like(g))
+    assert red.shape == g.shape and err.shape == g.shape
+    # axis of size 1: mean == dequantized self, residual is the quant error
+    np.testing.assert_allclose(np.asarray(red + err), np.asarray(g),
+                               atol=1e-6)
+    assert np.max(np.abs(np.asarray(err))) <= np.max(np.abs(np.asarray(g))) / 64
+
+
+def test_batch_plan_helper_on_distributed_fft():
+    from repro.core.fft import distributed as dfft
+    mesh = jax.make_mesh((1,), ("data",))
+    plan = dfft.batch_plan(mesh, 5)
+    assert plan.mesh_plan.per_device == 5
+    assert plan.report()["mesh_axes"] == ["data"]

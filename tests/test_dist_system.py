@@ -33,7 +33,8 @@ psh = jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs,
 params_sh = jax.tree.map(lambda x, s: jax.device_put(x, s), params, psh)
 bsh = {k: jax.device_put(v, NamedSharding(mesh, P("data", None)))
        for k, v in batch.items()}
-with jax.set_mesh(mesh):
+from repro.dist import compat
+with compat.set_mesh(mesh):
     loss_8dev = float(jax.jit(lambda p, b: lm.loss_fn(cfg, p, b))(
         params_sh, bsh))
 assert abs(loss_1dev - loss_8dev) < 2e-3, (loss_1dev, loss_8dev)
@@ -46,11 +47,11 @@ def test_dryrun_cell_small_mesh():
     """run_cell works end-to-end on a small (2,2,2) pod mesh: lower,
     compile, memory/cost/collective extraction."""
     out = run_in_subprocess_devices("""
-import jax
+from repro.dist import compat
 from repro.launch.dryrun import run_cell
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                        axis_types=compat.axis_types_auto(3))
 res = run_cell("qwen3-1.7b", "decode_32k", mesh, verbose=False)
 assert res["status"] == "ok", res
 assert res["flops_per_device"] > 0

@@ -188,9 +188,9 @@ def test_compressed_psum_error_feedback_subprocess():
     from conftest import run_in_subprocess_devices
     out = run_in_subprocess_devices("""
 import numpy as np, jax, jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.dist.collectives import compressed_psum_leaf
+from repro.dist.compat import shard_map
 
 mesh = jax.make_mesh((4,), ("pod",))
 g = jnp.asarray(np.random.default_rng(0).standard_normal((4, 512)),
