@@ -4,14 +4,16 @@ Emits ``name,us_per_call,derived`` CSV rows.
 
   fig5/*      — paper Figure 5: batched FFT, FourierPIM vs cuFFT models
   fig6/*      — paper Figure 6: complex & real polynomial multiplication
+  ntt/*       — exact modular polymul (NTT) latency/throughput/energy sweep
   tpu_fft/*   — TPU-native kernel path (beyond-paper; wall-clock + roofline)
   roofline/*  — per (arch x shape) three-term roofline from the dry-run
                 artifacts (skipped if artifacts/dryrun is absent)
 
 ``--smoke`` runs a minutes-scale subset (one PIM cell through the
-``repro.dist.batching`` scheduler, a tiny XLA FFT timing, and a
-ledger-accounted distributed-FFT trace) so CI catches perf-harness bitrot
-without paying for the full sweeps.
+``repro.dist.batching`` scheduler, the exact-NTT path incl. a bit-exact
+fused-polymul check, a tiny XLA FFT timing, and a ledger-accounted
+distributed-FFT trace) so CI catches perf-harness bitrot without paying
+for the full sweeps.
 """
 from __future__ import annotations
 
@@ -43,14 +45,35 @@ def smoke() -> None:
              f";waves={stats['waves']}"
              f";utilization={stats['utilization']:.2f}")
 
-    # 2. XLA FFT wall-clock at a reduced shape (structure check only).
+    # 2. Exact-NTT subsystem: closed-form throughput through the same wave
+    #    scheduler, plus a bit-exact fused-polymul check vs the schoolbook
+    #    oracle at a tiny n (kernel runs in interpret mode on CPU).
+    from repro.core.ntt import NTTParams, schoolbook_polymul
+    from repro.core.pim import INT32
+    from repro.core.pim.ntt_pim import batched_ntt_stats
+    from repro.kernels.ntt import ntt_polymul
+    nstats = batched_ntt_stats(2048, None, FOURIERPIM_8, INT32)
+    emit("smoke/pim_ntt/n=2048/full", nstats["latency_s"] * 1e6,
+         f"throughput={nstats['throughput_per_s']:.3e}"
+         f";waves={nstats['waves']}"
+         f";utilization={nstats['utilization']:.2f}")
+    params = NTTParams.make(64)
+    rng_mod = np.random.default_rng(1)
+    a = rng_mod.integers(0, params.q, (2, 64)).astype(np.uint32)
+    b = rng_mod.integers(0, params.q, (2, 64)).astype(np.uint32)
+    got = np.asarray(ntt_polymul(jnp.asarray(a), jnp.asarray(b), params))
+    want = schoolbook_polymul(a, b, params.q, negacyclic=True)
+    assert (got == want.astype(np.uint32)).all(), "NTT polymul mismatch"
+    emit("smoke/ntt_polymul/n=64", 0.0, f"q={params.q};exact=bit")
+
+    # 3. XLA FFT wall-clock at a reduced shape (structure check only).
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((8, 1024))
                     + 1j * rng.standard_normal((8, 1024)), jnp.complex64)
     us = time_jax(jax.jit(lambda v: F.fft(v, backend="xla")), x)
     emit("smoke/tpu_fft/n=1024", us, "backend=xla")
 
-    # 3. Distributed-FFT trace on a trivial mesh: the dist.collectives
+    # 4. Distributed-FFT trace on a trivial mesh: the dist.collectives
     #    ledger must see the all-to-alls and price them on the link.
     mesh = jax.make_mesh((1,), ("model",))
     spec = jax.ShapeDtypeStruct((2, 256), jnp.complex64)
@@ -64,10 +87,11 @@ def smoke() -> None:
 
 
 def full() -> None:
-    from benchmarks import (fft_pim_bench, polymul_pim_bench, roofline,
-                            tpu_fft_bench)
+    from benchmarks import (fft_pim_bench, ntt_pim_bench, polymul_pim_bench,
+                            roofline, tpu_fft_bench)
     fft_pim_bench.run()
     polymul_pim_bench.run()
+    ntt_pim_bench.run()
     tpu_fft_bench.run()
     if os.path.isdir(os.path.join("artifacts", "dryrun", "singlepod")):
         roofline.run("singlepod")

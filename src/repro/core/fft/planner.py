@@ -24,21 +24,44 @@ class FFTPlan:
     radix: int          # 2 or 4
     block_b: int        # batch block per kernel invocation (local tier)
     seq_shards: int     # model-axis shards of the sequence (distributed tier)
+    #: exact modular route: transforms dispatch to the NTT kernel
+    #: (kernels.ntt, radix-2 Montgomery butterflies) instead of the float
+    #: FFT — required for crypto polymul where results must be bit-exact
+    #: mod q (docs/ntt.md).
+    exact: bool = False
 
     def describe(self) -> str:
+        kind = "NTT (exact mod-q)" if self.exact else "FFT"
         if self.tier == "local":
-            return (f"local Pallas kernel, radix-{self.radix}, "
+            return (f"local Pallas {kind} kernel, radix-{self.radix}, "
                     f"batch block {self.block_b} (VMEM-resident)")
-        return (f"four-step distributed FFT over {self.seq_shards} devices, "
-                f"radix-{self.radix} local stages")
+        return (f"four-step distributed {kind} over {self.seq_shards} "
+                f"devices, radix-{self.radix} local stages")
 
 
 # A single sequence must keep ~2 fp32 planes x live factor in VMEM.
 _MAX_LOCAL_N = VMEM_BUDGET_BYTES // (2 * 4 * 4)   # = 256K points
 
 
-def plan(n: int, batch: int, *, model_shards: int = 1) -> FFTPlan:
-    assert n & (n - 1) == 0, f"n={n} must be a power of two"
+def plan(n: int, batch: int, *, model_shards: int = 1,
+         exact: bool = False) -> FFTPlan:
+    """Execution plan for a batch of n-point transforms.
+
+    ``exact=True`` routes to the modular-NTT kernel (uint32 residues,
+    radix-2 only — the Montgomery butterfly has no radix-4 shortcut worth
+    the lane pressure). The exact tier is always local: the four-step
+    distributed decomposition needs twiddle factors between steps, which
+    for the NTT is a different root-of-unity per shard — future work.
+    Raises ValueError on non-power-of-two n so misuse fails loudly instead
+    of silently mis-planning (asserts vanish under ``python -O``).
+    """
+    if n <= 0 or n & (n - 1):
+        raise ValueError(f"n={n} must be a power of two")
+    if batch < 0:
+        raise ValueError(f"batch={batch} must be non-negative")
+    if exact:
+        return FFTPlan(tier="local", radix=2,
+                       block_b=plan_batch_block(n), seq_shards=1, exact=True)
     radix = 4 if (n.bit_length() - 1) >= 2 else 2
     if n <= _MAX_LOCAL_N or model_shards == 1:
         return FFTPlan(tier="local", radix=radix,

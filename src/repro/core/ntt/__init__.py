@@ -1,0 +1,22 @@
+"""Exact modular transforms: the NTT counterpart of ``repro.core.fft``.
+
+Public surface:
+  NTTParams / choose_modulus / root_of_unity     (parameter selection)
+  ntt / intt / cyclic_polymul / negacyclic_polymul  (exact reference)
+  schoolbook_polymul                             (independent O(n^2) oracle)
+
+The production kernel lives in ``repro.kernels.ntt``; the PIM cost model in
+``repro.core.pim.ntt_pim``; semantics and modulus-selection rules are
+documented in docs/ntt.md.
+"""
+from repro.core.ntt.ref import (NTTParams, as_residues, bit_reverse_indices,
+                                choose_modulus, cyclic_polymul, intt,
+                                is_prime, negacyclic_polymul, ntt,
+                                primitive_root, root_of_unity,
+                                schoolbook_polymul)
+
+__all__ = [
+    "NTTParams", "as_residues", "bit_reverse_indices", "choose_modulus",
+    "cyclic_polymul", "intt", "is_prime", "negacyclic_polymul", "ntt",
+    "primitive_root", "root_of_unity", "schoolbook_polymul",
+]

@@ -1,8 +1,11 @@
 """Faithful reproduction of FourierPIM on its own terms: the logical
 crossbar simulator, AritPIM cost model, r/2r/2r-beta FFT mappings,
 convolution-theorem polymul, and the cuFFT baseline models (paper §6)."""
-from repro.core.pim.aritpim import (FP16, FP32, FloatSpec, butterfly_cycles,
-                                    complex_word_bits, op_cycles)
+from repro.core.pim.aritpim import (FP16, FP32, INT16, INT32, FloatSpec,
+                                    IntSpec, butterfly_cycles,
+                                    complex_word_bits, mod_add_cycles,
+                                    mod_mul_cycles, ntt_butterfly_cycles,
+                                    op_cycles)
 from repro.core.pim.crossbar import Counters, CrossbarSim
 from repro.core.pim.device_model import (A100, FOURIERPIM_8, FOURIERPIM_40,
                                          FULL_COMPLEX_BITS,
@@ -16,15 +19,26 @@ from repro.core.pim.polymul_pim import (PIMPolymulResult, pim_polymul,
                                         polymul_energy_j_per_op,
                                         polymul_latency_cycles,
                                         polymul_throughput_per_s)
+from repro.core.pim.ntt_pim import (PIMNTTResult, batched_ntt_stats,
+                                    ntt_2r, ntt_2rbeta, ntt_energy_j_per_op,
+                                    ntt_latency_cycles,
+                                    ntt_polymul_latency_cycles,
+                                    ntt_throughput_per_s, pim_ntt,
+                                    pim_ntt_polymul, r_ntt)
 from repro.core.pim import gpu_model
 
 __all__ = [
-    "FP16", "FP32", "FloatSpec", "butterfly_cycles", "complex_word_bits",
-    "op_cycles", "Counters", "CrossbarSim", "A100", "FOURIERPIM_8",
-    "FOURIERPIM_40", "FULL_COMPLEX_BITS", "HALF_COMPLEX_BITS", "GPUConfig",
-    "PIMConfig", "RTX3070", "with_partitions", "PIMFFTResult", "fft_2r",
-    "fft_2rbeta", "fft_energy_j_per_op", "fft_latency_cycles",
-    "fft_throughput_per_s", "pim_fft", "r_fft", "PIMPolymulResult",
-    "pim_polymul", "pim_polymul_real", "polymul_energy_j_per_op",
-    "polymul_latency_cycles", "polymul_throughput_per_s", "gpu_model",
+    "FP16", "FP32", "INT16", "INT32", "FloatSpec", "IntSpec",
+    "butterfly_cycles", "complex_word_bits", "mod_add_cycles",
+    "mod_mul_cycles", "ntt_butterfly_cycles", "op_cycles", "Counters",
+    "CrossbarSim", "A100", "FOURIERPIM_8", "FOURIERPIM_40",
+    "FULL_COMPLEX_BITS", "HALF_COMPLEX_BITS", "GPUConfig", "PIMConfig",
+    "RTX3070", "with_partitions", "PIMFFTResult", "fft_2r", "fft_2rbeta",
+    "fft_energy_j_per_op", "fft_latency_cycles", "fft_throughput_per_s",
+    "pim_fft", "r_fft", "PIMPolymulResult", "pim_polymul",
+    "pim_polymul_real", "polymul_energy_j_per_op", "polymul_latency_cycles",
+    "polymul_throughput_per_s", "PIMNTTResult", "batched_ntt_stats",
+    "ntt_2r", "ntt_2rbeta", "ntt_energy_j_per_op", "ntt_latency_cycles",
+    "ntt_polymul_latency_cycles", "ntt_throughput_per_s", "pim_ntt",
+    "pim_ntt_polymul", "r_ntt", "gpu_model",
 ]

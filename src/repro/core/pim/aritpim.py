@@ -26,6 +26,18 @@ reproduction calibrates, see EXPERIMENTS.md §Repro-calibration):
 Complex arithmetic (paper §4.1, rectangular form):
   cadd = 2 float adds;  cmul = 4 float muls + 2 float adds (Eq. (8)).
 Butterfly (paper §4.2): u +- w v = 1 cmul + 2 cadd = 4 fmul + 6 fadd.
+
+Modular (fixed-point) arithmetic — the exact-NTT counterpart (NTT-PIM
+[arXiv:2310.09715] maps the same butterfly structure onto integer residues):
+  mod add   a+b mod q:   fixed add + compare-subtract-q select
+                         = 2 (9N+1) + 2
+  mod mul   a*b mod q:   Barrett reduction on the 2N-bit product:
+                         t = a*b, qhat = (t * mu) >> 2N, r = t - qhat*q,
+                         then <=2 conditional subtracts
+                         = 3 fixed muls + 2 fixed adds + 4 select cycles
+  NTT butterfly (u, v) -> (u + w v, u - w v) mod q = 1 mod mul + 2 mod adds
+— the same shape as the complex butterfly with fmul/fadd swapped for their
+integer versions and no FLOAT_FIXED_OVERHEAD (no IEEE special cases).
 """
 from __future__ import annotations
 
@@ -49,6 +61,22 @@ FP16 = FloatSpec(exp_bits=5, man_bits=10)
 
 #: paper §6: full precision complex = 2 x fp32, half = 2 x fp16
 SPEC_BY_PRECISION = {"full": FP32, "half": FP16}
+
+
+@dataclasses.dataclass(frozen=True)
+class IntSpec:
+    """Unsigned fixed-point residue layout for the modular NTT: one
+    ``word_bits``-wide residue in [0, q) per element (q < 2^(word_bits-1)
+    so the conditional-subtract trick needs no extra carry column)."""
+    word_bits: int
+
+
+INT32 = IntSpec(word_bits=32)
+INT16 = IntSpec(word_bits=16)
+
+#: modular-NTT words: 32-bit residues carry the ~30-bit RLWE moduli the
+#: kernels target; 16-bit serves toy/teaching moduli.
+INT_SPEC_BY_WIDTH = {32: INT32, 16: INT16}
 
 
 def fixed_add_cycles(n_bits: int) -> int:
@@ -117,8 +145,45 @@ def complex_word_bits(spec: FloatSpec) -> int:
     return 2 * spec.total_bits
 
 
-# Convenience table used by benchmarks / tests.
-def op_cycles(op: str, spec: FloatSpec) -> int:
+# -- modular fixed-point ops (IntSpec) --------------------------------------
+
+def mod_add_cycles(spec: IntSpec) -> int:
+    """a + b mod q: fixed add, then compare/subtract-q select."""
+    return 2 * fixed_add_cycles(spec.word_bits) + 2
+
+
+def mod_mul_cycles(spec: IntSpec) -> int:
+    """a * b mod q via Barrett: product + two reduction muls + 2 subtracts
+    + select cycles (see module docstring)."""
+    w = spec.word_bits
+    return 3 * fixed_mul_cycles(w) + 2 * fixed_add_cycles(w) + 4
+
+
+def ntt_butterfly_cycles(spec: IntSpec) -> int:
+    """In-place modular butterfly (u, v) -> (u + w v, u - w v) mod q."""
+    return mod_mul_cycles(spec) + 2 * mod_add_cycles(spec)
+
+
+def storage_word_bits(spec) -> int:
+    """Per-element storage on the crossbar: a complex float word for
+    FloatSpec, a single residue word for IntSpec."""
+    if isinstance(spec, IntSpec):
+        return spec.word_bits
+    return complex_word_bits(spec)
+
+
+# Convenience table used by benchmarks / tests. The op names are shared
+# between the float-FFT and modular-NTT layers ("butterfly"/"copy"/"swap")
+# so the crossbar simulator and the group loops are spec-agnostic.
+def op_cycles(op: str, spec) -> int:
+    if isinstance(spec, IntSpec):
+        return {
+            "modadd": mod_add_cycles(spec),
+            "modmul": mod_mul_cycles(spec),
+            "butterfly": ntt_butterfly_cycles(spec),
+            "copy": copy_cycles(storage_word_bits(spec)),
+            "swap": swap_cycles(storage_word_bits(spec)),
+        }[op]
     return {
         "fadd": float_add_cycles(spec),
         "fmul": float_mul_cycles(spec),

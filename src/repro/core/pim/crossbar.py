@@ -46,32 +46,46 @@ class Counters:
 
 
 class CrossbarSim:
-    """One crossbar: (rows x word-slot) complex values + cost counters."""
+    """One crossbar: (rows x word-slot) values + cost counters.
 
-    def __init__(self, cfg: PIMConfig, spec: aritpim.FloatSpec):
+    Works for both number domains: complex floats (FloatSpec, the paper's
+    FFT) and modular residues (IntSpec, the exact NTT) — the spec only
+    enters through ``aritpim.op_cycles`` and the storage word width.
+
+    Every charge appends a ``(tag, cycles)`` record to ``self.log`` so tests
+    can assert *ordering* contracts (e.g. the input bit-reversal permutation
+    is charged before the first butterfly in every layout), not just totals.
+    """
+
+    def __init__(self, cfg: PIMConfig, spec):
         self.cfg = cfg
         self.spec = spec
-        self.word_bits = aritpim.complex_word_bits(spec)
+        self.word_bits = aritpim.storage_word_bits(spec)
         self.slots = cfg.crossbar_cols // self.word_bits
         self.values = np.zeros((cfg.crossbar_rows, self.slots), np.complex128)
         self.ctr = Counters()
+        self.log: list[tuple[str, int]] = []
 
     # -- cost charging ------------------------------------------------------
     def charge_column_op(self, op: str, active_rows: int, serial: int = 1):
         c = aritpim.op_cycles(op, self.spec) * serial
         self.ctr.cycles += c
         self.ctr.gates += c * active_rows
+        self.log.append((op, c))
 
-    def charge_row_ops(self, n_rows: int, cycles_per_row: int = 2):
+    def charge_row_ops(self, n_rows: int, cycles_per_row: int = 2,
+                       tag: str = "row"):
         """Serial row-granularity moves (copy=2 NOT cycles, swap=6)."""
         self.ctr.cycles += n_rows * cycles_per_row
         self.ctr.gates += n_rows * cycles_per_row * self.word_bits
+        self.log.append((tag, n_rows * cycles_per_row))
 
     def charge_twiddle_writes(self, n_values: int):
         """Constants written by the periphery (paper footnote 3): one row
         write per value, parallel across crossbars, negligible energy."""
         self.ctr.cycles += n_values
         self.ctr.gates += n_values * self.word_bits
+        self.log.append(("twiddle", n_values))
 
     # -- value-level ops (verified numerically) -----------------------------
     def load(self, x: np.ndarray, slot0: int = 0):
@@ -97,3 +111,13 @@ class CrossbarSim:
         t = w * v
         self.charge_column_op("butterfly", active_rows, serial=serial_units)
         return u + t, u - t
+
+    def butterfly_rows_mod(self, u: np.ndarray, v: np.ndarray, w: np.ndarray,
+                           q: int, active_rows: int, serial_units: int = 1):
+        """Modular butterfly (u + w v, u - w v) mod q on uint64 residue
+        vectors; one ``ntt_butterfly``-costed vectored op per serial unit.
+        Exact: all operands < q < 2^31, products < 2^62 fit uint64."""
+        qq = np.uint64(q)
+        t = (w * v) % qq
+        self.charge_column_op("butterfly", active_rows, serial=serial_units)
+        return (u + t) % qq, (u + qq - t) % qq

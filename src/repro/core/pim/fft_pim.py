@@ -57,6 +57,9 @@ def _perm_swap_count(n: int) -> int:
 class PIMFFTResult:
     output: np.ndarray
     counters: Counters
+    #: ordered (tag, cycles) charge records from the simulator, for
+    #: counter-ordering assertions (see CrossbarSim.log).
+    log: tuple = ()
 
 
 def _twiddles(n: int, inverse: bool) -> np.ndarray:
@@ -104,7 +107,7 @@ def r_fft(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
     sim = CrossbarSim(cfg, spec)
     sim.load(x)
     if charge_perm:
-        sim.charge_row_ops(_perm_swap_count(n), cycles_per_row=6)
+        sim.charge_row_ops(_perm_swap_count(n), cycles_per_row=6, tag="perm")
 
     def transition(stage):
         # shift half right (column-parallel word copy) + r/2 rows up, then
@@ -116,7 +119,7 @@ def r_fft(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
 
     y = _fft_groups(sim, x, inverse=inverse, serial_units=1,
                     active_rows=n // 2, transition_fn=transition)
-    return PIMFFTResult(output=y, counters=sim.ctr)
+    return PIMFFTResult(output=y, counters=sim.ctr, log=tuple(sim.log))
 
 
 def fft_2r(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
@@ -128,7 +131,7 @@ def fft_2r(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
     sim = CrossbarSim(cfg, spec)
     sim.load(x)
     if charge_perm:
-        sim.charge_row_ops(_perm_swap_count(n), cycles_per_row=6)
+        sim.charge_row_ops(_perm_swap_count(n), cycles_per_row=6, tag="perm")
 
     def transition(stage):
         if stage == 0:
@@ -140,7 +143,7 @@ def fft_2r(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
 
     y = _fft_groups(sim, x, inverse=inverse, serial_units=1,
                     active_rows=r, transition_fn=transition)
-    return PIMFFTResult(output=y, counters=sim.ctr)
+    return PIMFFTResult(output=y, counters=sim.ctr, log=tuple(sim.log))
 
 
 def fft_2rbeta(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
@@ -159,6 +162,14 @@ def fft_2rbeta(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
         f"n={n} exceeds crossbar width (footnote 7)"
     sim = CrossbarSim(cfg, spec)
     serial = math.ceil(beta / cfg.partitions)
+    if charge_perm:
+        # Input bit-reversal happens BEFORE the group loop, exactly as in
+        # the r/2r configurations (it permutes the in-array layout, bounded
+        # by one array's 2r elements); an earlier revision charged it after
+        # the groups, which kept the totals right but broke any
+        # counter-ordering invariant (tests/test_pim_ntt.py pins this).
+        sim.charge_row_ops(_perm_swap_count(min(n, 2 * r)), cycles_per_row=6,
+                           tag="perm")
 
     def transition(stage):
         if stage == 0:
@@ -173,9 +184,7 @@ def fft_2rbeta(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
 
     y = _fft_groups(sim, x, inverse=inverse, serial_units=serial,
                     active_rows=r, transition_fn=transition)
-    if charge_perm:
-        sim.charge_row_ops(_perm_swap_count(min(n, 2 * r)), cycles_per_row=6)
-    return PIMFFTResult(output=y, counters=sim.ctr)
+    return PIMFFTResult(output=y, counters=sim.ctr, log=tuple(sim.log))
 
 
 def pim_fft(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,

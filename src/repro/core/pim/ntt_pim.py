@@ -1,0 +1,288 @@
+"""In-memory NUMBER-THEORETIC transform on the crossbar simulator.
+
+The exact counterpart of ``fft_pim.py``: the same r / 2r / 2r-beta layout
+algebra (paper §4.3-4.5 — the configurations describe data MOVEMENT, which
+is domain-independent), with the complex floating-point butterfly replaced
+by a fixed-point modular one costed per AritPIM's integer sequences
+(``aritpim.IntSpec``; NTT-PIM [arXiv:2310.09715] maps the identical
+structure). Values are tracked exactly in uint64 residues and verified
+against ``core.ntt.ref``; cycle/gate counters accumulate per vectored op,
+and the closed forms below are asserted equal to the simulator's counters
+in tests/test_pim_ntt.py — the same parity contract tests/test_pim.py
+enforces for the float FFT.
+
+Differences from the float pipeline, all from the arithmetic domain:
+
+  * butterfly: 1 Barrett modmul + 2 modadds on w-bit words (no IEEE
+    special-case overhead), vs 4 fmul + 6 fadd on 2x(1+e+m) bits;
+  * inverse scaling: 1/n is a genuine modmul by n^{-1} mod q, not an
+    exponent decrement (there is no exponent);
+  * negacyclic twist (RLWE, mod x^n + 1): one column-parallel modmul per
+    operand before the forward transforms and one after the inverse, with
+    the 1/n fold-in — the §5 permutation-cancellation analogue is charged
+    the same way (DIT/DIF pairing cancels the bit-reversals, so polymul
+    transforms skip the permutation cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.ntt.ref import NTTParams, as_residues
+from repro.core.pim import aritpim
+from repro.core.pim.crossbar import Counters, CrossbarSim
+from repro.core.pim.device_model import PIMConfig
+from repro.core.pim.fft_pim import _bit_reverse_perm, _perm_swap_count
+
+
+@dataclasses.dataclass(frozen=True)
+class PIMNTTResult:
+    output: np.ndarray
+    counters: Counters
+    #: ordered (tag, cycles) charge records (see CrossbarSim.log).
+    log: tuple = ()
+
+
+_residues = as_residues    # same contract as the reference: floats raise
+
+
+def _ntt_groups(sim: CrossbarSim, x: np.ndarray, params: NTTParams, *,
+                inverse: bool, serial_units: int, active_rows: int,
+                transition_fn) -> np.ndarray:
+    """Shared group loop: iterative DIT modular butterflies after bit
+    reversal — structurally identical to ``fft_pim._fft_groups``."""
+    n = params.n
+    q = np.uint64(params.q)
+    y = _residues(x, params.q)[_bit_reverse_perm(n)]
+    pw = params.powers(params.w_inv if inverse else params.w)
+    for s in range(n.bit_length() - 1):
+        m = 2 << s            # butterfly span
+        half = m >> 1
+        idx = np.arange(n).reshape(n // m, m)
+        top = idx[:, :half].ravel()
+        bot = idx[:, half:].ravel()
+        w = np.tile(pw[(n // m) * np.arange(half)], n // m)
+        sim.charge_twiddle_writes(sim.cfg.crossbar_rows // 2)
+        transition_fn(s)
+        u, v = sim.butterfly_rows_mod(y[top], y[bot], w, params.q,
+                                      active_rows,
+                                      serial_units=serial_units)
+        y[top], y[bot] = u, v
+    if inverse:
+        # 1/n scaling: a real modmul by n^{-1} mod q (no exponent trick).
+        sim.charge_column_op("modmul", active_rows)
+        y = (y * np.uint64(params.n_inv)) % q
+    return y
+
+
+def r_ntt(x: np.ndarray, params: NTTParams, cfg: PIMConfig,
+          spec: aritpim.IntSpec, *, inverse: bool = False,
+          charge_perm: bool = True) -> PIMNTTResult:
+    """r-configuration: n = crossbar rows, one residue per row."""
+    n = params.n
+    assert n == cfg.crossbar_rows, f"r-NTT needs n == rows ({cfg.crossbar_rows})"
+    sim = CrossbarSim(cfg, spec)
+    sim.load(_residues(x, params.q).astype(np.float64))
+    if charge_perm:
+        sim.charge_row_ops(_perm_swap_count(n), cycles_per_row=6, tag="perm")
+
+    def transition(stage):
+        sim.charge_column_op("copy", n // 2)
+        sim.charge_row_ops(n // 2, cycles_per_row=2)
+        sim.charge_column_op("copy", n // 2)
+        sim.charge_row_ops(n // 2, cycles_per_row=2)
+
+    y = _ntt_groups(sim, x, params, inverse=inverse, serial_units=1,
+                    active_rows=n // 2, transition_fn=transition)
+    return PIMNTTResult(output=y, counters=sim.ctr, log=tuple(sim.log))
+
+
+def ntt_2r(x: np.ndarray, params: NTTParams, cfg: PIMConfig,
+           spec: aritpim.IntSpec, *, inverse: bool = False,
+           charge_perm: bool = True) -> PIMNTTResult:
+    """2r-configuration: two residues per row (snake), full-row use."""
+    n = params.n
+    r = cfg.crossbar_rows
+    assert n == 2 * r, f"2r-NTT needs n == 2*rows ({2 * r})"
+    sim = CrossbarSim(cfg, spec)
+    sim.load(_residues(x, params.q).astype(np.float64))
+    if charge_perm:
+        sim.charge_row_ops(_perm_swap_count(n), cycles_per_row=6, tag="perm")
+
+    def transition(stage):
+        if stage == 0:
+            return
+        sim.charge_column_op("swap", r)
+        sim.charge_row_ops(r // 2, cycles_per_row=6)
+
+    y = _ntt_groups(sim, x, params, inverse=inverse, serial_units=1,
+                    active_rows=r, transition_fn=transition)
+    return PIMNTTResult(output=y, counters=sim.ctr, log=tuple(sim.log))
+
+
+def ntt_2rbeta(x: np.ndarray, params: NTTParams, cfg: PIMConfig,
+               spec: aritpim.IntSpec, *, inverse: bool = False,
+               charge_perm: bool = True) -> PIMNTTResult:
+    """2r-beta configuration: 2*beta residues per row across beta
+    column-units; butterflies serial over units, ceil(beta/p) with
+    partitions."""
+    n = params.n
+    r = cfg.crossbar_rows
+    beta = n // (2 * r)
+    assert n == 2 * r * beta and beta >= 1, f"n={n} not a 2r*beta multiple"
+    word = spec.word_bits
+    assert 2 * beta * word <= cfg.crossbar_cols, \
+        f"n={n} exceeds crossbar width"
+    sim = CrossbarSim(cfg, spec)
+    serial = math.ceil(beta / cfg.partitions)
+    if charge_perm:
+        # Charged BEFORE the group loop, same placement as r/2r (the
+        # fft_2rbeta ordering fix rides the same contract).
+        sim.charge_row_ops(_perm_swap_count(min(n, 2 * r)), cycles_per_row=6,
+                           tag="perm")
+
+    def transition(stage):
+        if stage == 0:
+            return
+        sim.charge_column_op("swap", r)
+        sim.charge_row_ops(r // 2, cycles_per_row=6)
+        if stage >= int(math.log2(2 * r)):
+            sim.charge_column_op("copy", r,
+                                 serial=math.ceil(beta / cfg.partitions))
+
+    y = _ntt_groups(sim, x, params, inverse=inverse, serial_units=serial,
+                    active_rows=r, transition_fn=transition)
+    return PIMNTTResult(output=y, counters=sim.ctr, log=tuple(sim.log))
+
+
+def pim_ntt(x: np.ndarray, params: NTTParams, cfg: PIMConfig,
+            spec: aritpim.IntSpec, *, inverse: bool = False,
+            charge_perm: bool = True) -> PIMNTTResult:
+    """Dispatch to the layout for this n, mirroring ``fft_pim.pim_fft``."""
+    if params.n == cfg.crossbar_rows:
+        return r_ntt(x, params, cfg, spec, inverse=inverse,
+                     charge_perm=charge_perm)
+    return ntt_2rbeta(x, params, cfg, spec, inverse=inverse,
+                      charge_perm=charge_perm)
+
+
+def pim_ntt_polymul(a: np.ndarray, b: np.ndarray, params: NTTParams,
+                    cfg: PIMConfig, spec: aritpim.IntSpec, *,
+                    negacyclic: bool = True) -> PIMNTTResult:
+    """Exact polynomial product mod (x^n ± 1, q) on the simulator.
+
+    Negacyclic: psi-twist both operands (2 modmuls), transform without the
+    cancelled permutations, pointwise modmul, inverse transform, untwist
+    (1 modmul, the 1/n already charged by the inverse path)."""
+    n = params.n
+    q = np.uint64(params.q)
+    beta = max(1, n // (2 * cfg.crossbar_rows))
+    serial = math.ceil(beta / cfg.partitions)
+    sim = CrossbarSim(cfg, spec)
+    at = _residues(a, params.q)
+    bt = _residues(b, params.q)
+    if negacyclic:
+        psi_pow = params.powers(params.psi)
+        at = (at * psi_pow) % q
+        bt = (bt * psi_pow) % q
+        sim.charge_column_op("modmul", cfg.crossbar_rows, serial=serial)
+        sim.charge_column_op("modmul", cfg.crossbar_rows, serial=serial)
+    fa = pim_ntt(at, params, cfg, spec, charge_perm=False)
+    fb = pim_ntt(bt, params, cfg, spec, charge_perm=False)
+    prod = (fa.output * fb.output) % q
+    sim.charge_column_op("modmul", cfg.crossbar_rows, serial=serial)
+    inv = pim_ntt(prod, params, cfg, spec, inverse=True, charge_perm=False)
+    out = inv.output
+    if negacyclic:
+        out = (out * params.powers(params.psi_inv)) % q
+        sim.charge_column_op("modmul", cfg.crossbar_rows, serial=serial)
+    ctr = Counters(
+        cycles=fa.counters.cycles + fb.counters.cycles + inv.counters.cycles
+        + sim.ctr.cycles,
+        gates=fa.counters.gates + fb.counters.gates + inv.counters.gates
+        + sim.ctr.gates)
+    return PIMNTTResult(output=out, counters=ctr)
+
+
+# ---------------------------------------------------------------------------
+# Closed forms (asserted == simulator in tests/test_pim_ntt.py)
+# ---------------------------------------------------------------------------
+
+def ntt_latency_cycles(n: int, cfg: PIMConfig, spec: aritpim.IntSpec,
+                       *, charge_perm: bool = True,
+                       inverse: bool = False) -> int:
+    r = cfg.crossbar_rows
+    beta = max(1, n // (2 * r))
+    stages = n.bit_length() - 1
+    bfly = aritpim.ntt_butterfly_cycles(spec)
+    word = spec.word_bits
+    serial = math.ceil(beta / cfg.partitions)
+    total = 0
+    if charge_perm:
+        total += _perm_swap_count(min(n, 2 * r)) * 6
+    for s in range(stages):
+        total += r // 2                     # twiddle writes
+        total += bfly * serial              # butterflies
+        if n == r:                          # r-config moves
+            total += 2 * aritpim.copy_cycles(word) + 2 * (n // 2) * 2
+        elif s > 0:                         # 2r / 2rb transitions
+            total += aritpim.swap_cycles(word) + (r // 2) * 6
+            if n > 2 * r and s >= int(math.log2(2 * r)):
+                total += aritpim.copy_cycles(word) * serial
+    if inverse:
+        total += aritpim.mod_mul_cycles(spec)   # 1/n modmul pass
+    return total
+
+
+def ntt_polymul_latency_cycles(n: int, cfg: PIMConfig,
+                               spec: aritpim.IntSpec, *,
+                               negacyclic: bool = True) -> int:
+    beta = max(1, n // (2 * cfg.crossbar_rows))
+    serial = math.ceil(beta / cfg.partitions)
+    fwd = ntt_latency_cycles(n, cfg, spec, charge_perm=False)
+    inv = ntt_latency_cycles(n, cfg, spec, charge_perm=False, inverse=True)
+    pointwise = aritpim.mod_mul_cycles(spec) * serial
+    twists = 3 * aritpim.mod_mul_cycles(spec) * serial if negacyclic else 0
+    return 2 * fwd + inv + pointwise + twists
+
+
+def ntt_throughput_per_s(n: int, cfg: PIMConfig, spec: aritpim.IntSpec
+                         ) -> float:
+    """Batched throughput: one NTT per crossbar, all arrays in parallel.
+    A w-bit residue word is half the complex float word, so per-array
+    capacity roughly doubles vs the float FFT at equal n."""
+    lat = ntt_latency_cycles(n, cfg, spec) / cfg.clock_hz
+    return cfg.batch_capacity(n, spec.word_bits) * cfg.concurrency / lat
+
+
+def batched_ntt_stats(n: int, batch: int | None, cfg: PIMConfig,
+                      spec: aritpim.IntSpec, *, mesh=None) -> dict:
+    """Schedule a batch of B n-point NTTs through the same
+    ``repro.dist.batching`` wave scheduler as ``batched_fft_stats``."""
+    from repro.dist import batching
+    num_arrays = max(1, int(cfg.batch_capacity(n, spec.word_bits)
+                            * cfg.concurrency))
+    if batch is None:        # one full wave everywhere: the steady state
+        n_dev = (batching.shard_batch(0, mesh).n_devices
+                 if mesh is not None else 1)
+        batch = num_arrays * n_dev
+    plan = batching.plan_crossbar_batch(batch, num_arrays=num_arrays,
+                                        mesh=mesh)
+    wave_latency_s = ntt_latency_cycles(n, cfg, spec) / cfg.clock_hz
+    return {
+        **plan.report(),
+        "n": n,
+        "wave_latency_s": wave_latency_s,
+        "latency_s": plan.latency(wave_latency_s),
+        "throughput_per_s": plan.throughput(wave_latency_s),
+    }
+
+
+def ntt_energy_j_per_op(n: int, cfg: PIMConfig, spec: aritpim.IntSpec,
+                        *, q: int | None = None) -> float:
+    params = NTTParams.make(n, q)
+    x = np.random.default_rng(0).integers(0, params.q, size=n)
+    res = pim_ntt(x, params, cfg, spec)
+    return res.counters.energy_j(cfg)

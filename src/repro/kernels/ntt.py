@@ -1,0 +1,268 @@
+"""Pallas TPU kernel: batched Stockham NTT + fused modular polymul.
+
+The exact (mod-q) counterpart of ``kernels/fft.py`` / ``kernels/polymul.py``:
+the same single-VMEM-residency Stockham schedule, with the complex butterfly
+replaced by a modular one in uint32 lanes. This opens the paper's §5 crypto
+workload end to end — RLWE/FHE polynomial products must be bit-exact, which
+the float FFT path cannot deliver.
+
+Arithmetic strategy (all in 32-bit lanes; no 64-bit integers needed, so the
+kernel runs identically under jax's default x64-disabled config and on TPU):
+
+* Residues live in uint32, q an odd prime < 2^31 (``core.ntt.ref`` selects
+  it), so sums fit without carry columns and 2q < 2^32.
+* 32x32 -> 64-bit products are built from four 16x16 partial products with
+  explicit carry recovery (``_mul32_full``) — the VPU analogue of AritPIM's
+  bit-serial shift-and-add multiplier.
+* Twiddles are stored in Montgomery form (w^k * 2^32 mod q), so each
+  butterfly multiply is ONE Montgomery REDC: mont(v, w_mont) = v*w mod q.
+  Data itself stays in the normal domain throughout — the same trick NTT
+  libraries use so no domain conversion passes are needed.
+* The fused ``ntt_polymul`` folds the negacyclic psi-twist into the input
+  multiply and the psi^{-1}/n untwist into the output multiply — the exact
+  analogue of ``kernels/polymul.py``'s permutation-cancellation/scaling
+  fusion (paper §5): forward x2 -> pointwise modmul -> inverse, one VMEM
+  residency, zero extra passes for twist/scale.
+
+Batching reuses ``plan_batch_block`` from kernels/fft.py: a uint32 residue
+plane is half the footprint of the fp32 complex planes, so the FFT's block
+plan is strictly conservative here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.ntt.ref import NTTParams
+from repro.kernels.fft import plan_batch_block
+
+# Plain Python ints: weak-typed scalars stay out of the kernel closure
+# (pallas_call rejects captured traced constants).
+_U16 = 16
+_MASK16 = 0xFFFF
+
+
+# ---------------------------------------------------------------------------
+# uint32 modular primitives
+# ---------------------------------------------------------------------------
+
+def _mul32_full(a, b):
+    """Full 64-bit product of uint32 lanes as a (hi, lo) uint32 pair.
+
+    Four 16x16 partials; each fits uint32 exactly. Carries recovered with
+    unsigned-compare tricks (x + y wrapped iff result < x).
+    """
+    a0, a1 = a & _MASK16, a >> _U16
+    b0, b1 = b & _MASK16, b >> _U16
+    ll = a0 * b0
+    lh = a0 * b1
+    hl = a1 * b0
+    hh = a1 * b1
+    mid = lh + hl
+    carry_mid = (mid < lh).astype(jnp.uint32)
+    lo = ll + (mid << _U16)
+    carry_lo = (lo < ll).astype(jnp.uint32)
+    hi = hh + (mid >> _U16) + (carry_mid << _U16) + carry_lo
+    return hi, lo
+
+
+def _mont_mul(a, b, q: int, qinv: int):
+    """Montgomery product a*b*2^-32 mod q (q odd, < 2^31; qinv = -q^-1 mod
+    2^32). With b in Montgomery form this is a*b mod q in one REDC."""
+    qq = jnp.uint32(q)
+    hi, lo = _mul32_full(a, b)
+    m = lo * jnp.uint32(qinv)                 # mod 2^32 wrap is the point
+    mq_hi, _ = _mul32_full(m, qq)
+    # lo + (m*q mod 2^32) == 0 mod 2^32 by construction: carry iff lo != 0.
+    t = hi + mq_hi + (lo != 0).astype(jnp.uint32)
+    return jnp.where(t >= qq, t - qq, t)      # t < 2q always
+
+
+def _add_mod(a, b, q: int):
+    qq = jnp.uint32(q)
+    s = a + b                                  # a, b < q < 2^31: no wrap
+    return jnp.where(s >= qq, s - qq, s)
+
+
+def _sub_mod(a, b, q: int):
+    return jnp.where(a >= b, a - b, a + jnp.uint32(q) - b)
+
+
+# ---------------------------------------------------------------------------
+# Stockham sweeps (mirrors kernels/fft.py::stockham_stages, radix-2)
+# ---------------------------------------------------------------------------
+
+def _ntt_radix2_stage(y, w, L, r, n, q: int, qinv: int):
+    """One Stockham sweep (B, L, r) -> (B, 2L, r/2) over F_q."""
+    half = r // 2
+    e = y[:, :, :half]
+    o = y[:, :, half:]
+    stride = n // (2 * L)
+    tw = jax.lax.slice_in_dim(w, 0, L * stride, stride, axis=1)[:, :, None]
+    t = _mont_mul(o, tw, q, qinv)
+    return jnp.concatenate([_add_mod(e, t, q), _sub_mod(e, t, q)], axis=1)
+
+
+def ntt_stages(x, w, *, n: int, q: int, qinv: int):
+    """All Stockham sweeps on VMEM-resident values.
+
+    x: (B_blk, n) uint32 residues. w: (1, n) master Montgomery twiddle table
+    (powers of the n-th root; of its inverse for the inverse transform).
+    Output is in natural order — Stockham autosorts, so like the float
+    kernel there is no bit-reversal permutation anywhere.
+    """
+    b = x.shape[0]
+    y = x.reshape(b, 1, n)
+    L, r = 1, n
+    while r > 1:
+        y = _ntt_radix2_stage(y, w, L, r, n, q, qinv)
+        L, r = 2 * L, r // 2
+    return y.reshape(b, n)
+
+
+def _ntt_kernel(w_ref, x_ref, o_ref, *, n: int, q: int, qinv: int,
+                scale_mont: int | None):
+    y = ntt_stages(x_ref[...], w_ref[...], n=n, q=q, qinv=qinv)
+    if scale_mont is not None:     # inverse: fold in n^-1 (Montgomery form)
+        y = _mont_mul(y, jnp.uint32(scale_mont), q, qinv)
+    o_ref[...] = y
+
+
+def _ntt_polymul_kernel(wf_ref, wi_ref, twist_ref, untwist_ref,
+                        a_ref, b_ref, c_ref, *, n: int, q: int, qinv: int,
+                        r2: int, negacyclic: bool):
+    """Fused modular polymul: twist -> NTT x2 -> pointwise -> INTT -> untwist,
+    one VMEM residency (paper §5 structure, exact arithmetic)."""
+    wf = wf_ref[...]
+    wi = wi_ref[...]
+    a = a_ref[...]
+    b = b_ref[...]
+    if negacyclic:                 # psi^j twist: x^n+1 products via cyclic NTT
+        tw = twist_ref[...]
+        a = _mont_mul(a, tw, q, qinv)
+        b = _mont_mul(b, tw, q, qinv)
+    fa = ntt_stages(a, wf, n=n, q=q, qinv=qinv)
+    fb = ntt_stages(b, wf, n=n, q=q, qinv=qinv)
+    # Pointwise product needs one operand in Montgomery form first (r2 hop).
+    p = _mont_mul(_mont_mul(fa, jnp.uint32(r2), q, qinv), fb, q, qinv)
+    c = ntt_stages(p, wi, n=n, q=q, qinv=qinv)
+    # untwist table carries psi^{-j} * n^{-1} (or just n^{-1} for cyclic).
+    c_ref[...] = _mont_mul(c, untwist_ref[...], q, qinv)
+
+
+# ---------------------------------------------------------------------------
+# Host-side wrappers
+# ---------------------------------------------------------------------------
+
+def _master_table(params: NTTParams, base: int) -> jnp.ndarray:
+    """(1, n) uint32 Montgomery-form powers of ``base``."""
+    pw = params.powers(base)
+    return jnp.asarray(params.to_montgomery(pw).astype(np.uint32)[None, :])
+
+
+def _as_residues(x, q: int):
+    """Reduce integer coefficients into [0, q) uint32 — same contract as
+    ``core.ntt.ref.as_residues``: floats raise, negatives wrap Python-style.
+    The in-kernel butterflies assume operands < q; skipping this reduction
+    would silently corrupt results for unreduced input."""
+    x = jnp.asarray(x)
+    assert x.ndim == 2, f"expected (batch, n), got {x.shape}"
+    if not jnp.issubdtype(x.dtype, jnp.integer):
+        raise TypeError(f"NTT needs integer residues, got {x.dtype}")
+    if jnp.issubdtype(x.dtype, jnp.signedinteger):
+        # jnp.remainder takes the divisor's sign: (-1) % q == q - 1, and
+        # the result fits int32 since q < 2^31.
+        return (x.astype(jnp.int32) % q).astype(jnp.uint32)
+    return x.astype(jnp.uint32) % jnp.uint32(q)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "inverse",
+                                             "interpret", "block_b"))
+def ntt_batched(x: jax.Array, params: NTTParams, *, inverse: bool = False,
+                interpret: bool = True, block_b: int | None = None
+                ) -> jax.Array:
+    """Batched cyclic NTT of uint32 residues (B, n) mod ``params.q``.
+
+    Bit-exact equal to ``core.ntt.ref.ntt``/``intt`` (tests/test_ntt.py).
+    Same grid/tiling contract as ``fft_planes``: grid=(B/B_blk,), each
+    program transforms its block entirely in VMEM.
+    """
+    x = _as_residues(x, params.q)
+    b, n = x.shape
+    assert n == params.n, f"n={n} != params.n={params.n}"
+    blk = block_b or plan_batch_block(n)
+    pad = (-b) % blk
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    bp = x.shape[0]
+    w = _master_table(params, params.w_inv if inverse else params.w)
+    scale = None
+    if inverse:
+        scale = params.n_inv * (1 << 32) % params.q   # Montgomery n^-1
+    kern = functools.partial(_ntt_kernel, n=n, q=params.q, qinv=params.qinv,
+                             scale_mont=scale)
+    y = pl.pallas_call(
+        kern,
+        grid=(bp // blk,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),    # twiddles (broadcast)
+            pl.BlockSpec((blk, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+        interpret=interpret,
+    )(w, x)
+    return y[:b] if pad else y
+
+
+@functools.partial(jax.jit, static_argnames=("params", "negacyclic",
+                                             "interpret", "block_b"))
+def ntt_polymul(a: jax.Array, b: jax.Array, params: NTTParams, *,
+                negacyclic: bool = True, interpret: bool = True,
+                block_b: int | None = None) -> jax.Array:
+    """Exact polynomial product mod (x^n + 1, q) — or x^n - 1 with
+    ``negacyclic=False`` — of residue batches (B, n), fully fused.
+
+    Matches ``core.ntt.ref.negacyclic_polymul`` (and the schoolbook oracle)
+    bit-exactly; see docs/ntt.md for the RLWE semantics.
+    """
+    a = _as_residues(a, params.q)
+    bb = _as_residues(b, params.q)
+    assert a.shape == bb.shape
+    bsz, n = a.shape
+    assert n == params.n, f"n={n} != params.n={params.n}"
+    blk = block_b or max(1, plan_batch_block(n) // 2)  # 3 transforms live
+    pad = (-bsz) % blk
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+        bb = jnp.pad(bb, ((0, pad), (0, 0)))
+    bp = a.shape[0]
+    wf = _master_table(params, params.w)
+    wi = _master_table(params, params.w_inv)
+    if negacyclic:
+        twist = _master_table(params, params.psi)
+        un = params.powers(params.psi_inv) * np.uint64(params.n_inv) \
+            % np.uint64(params.q)
+    else:
+        twist = _master_table(params, 1)               # unused in-kernel
+        un = np.full(n, params.n_inv, np.uint64)
+    untwist = jnp.asarray(
+        params.to_montgomery(un).astype(np.uint32)[None, :])
+    kern = functools.partial(_ntt_polymul_kernel, n=n, q=params.q,
+                             qinv=params.qinv, r2=params.r2,
+                             negacyclic=negacyclic)
+    bspec = pl.BlockSpec((blk, n), lambda i: (i, 0))
+    wspec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    c = pl.pallas_call(
+        kern,
+        grid=(bp // blk,),
+        in_specs=[wspec, wspec, wspec, wspec, bspec, bspec],
+        out_specs=bspec,
+        out_shape=jax.ShapeDtypeStruct((bp, n), jnp.uint32),
+        interpret=interpret,
+    )(wf, wi, twist, untwist, a, bb)
+    return c[:bsz] if pad else c

@@ -14,12 +14,16 @@
 Example:
   PYTHONPATH=src python -m repro.launch.serve --service fft --n 1024 \
       --batch 64 --requests 512 --op polymul-real
+  # exact modular (RLWE negacyclic) polymul endpoint:
+  PYTHONPATH=src python -m repro.launch.serve --service fft --n 1024 \
+      --batch 32 --requests 128 --op polymul-mod
   PYTHONPATH=src python -m repro.launch.serve --service lm \
       --arch qwen3-1.7b --smoke --prompt-len 32 --gen 32
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import queue
 import threading
 import time
@@ -38,12 +42,18 @@ from repro.models import lm
 # ---------------------------------------------------------------------------
 
 class FFTService:
-    """Batched transform service with a request queue and a worker loop."""
+    """Batched transform service with a request queue and a worker loop.
+
+    ``op='polymul-mod'`` is the exact modular endpoint (paper §5's crypto
+    motivation): negacyclic products mod (x^n + 1, q) through the fused
+    NTT kernel — bit-exact, so results can feed an RLWE/FHE pipeline.
+    """
 
     def __init__(self, n: int, batch: int, op: str = "fft"):
         self.n = n
         self.batch = batch
         self.op = op
+        self.ntt_params = None
         self.q: queue.Queue = queue.Queue()
         self.results: dict[int, np.ndarray] = {}
         self.done = threading.Event()
@@ -55,6 +65,12 @@ class FFTService:
         elif op == "polymul-real":
             self._fn = jax.jit(
                 lambda a, b: fft_core.polymul(a, b, mode="circular"))
+        elif op == "polymul-mod":
+            from repro.core.ntt import NTTParams
+            from repro.kernels import ntt as kntt
+            self.ntt_params = NTTParams.make(n)
+            self._fn = functools.partial(kntt.ntt_polymul,
+                                         params=self.ntt_params)
         else:
             raise ValueError(op)
 
@@ -110,6 +126,10 @@ def run_fft_service(args) -> dict:
             if args.op == "fft":
                 payload = (rng.standard_normal(args.n)
                            + 1j * rng.standard_normal(args.n))
+            elif args.op == "polymul-mod":
+                q = svc.ntt_params.q
+                payload = (rng.integers(0, q, args.n).astype(np.uint32),
+                           rng.integers(0, q, args.n).astype(np.uint32))
             else:
                 payload = (rng.standard_normal(args.n).astype(np.float32),
                            rng.standard_normal(args.n).astype(np.float32))
@@ -167,7 +187,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--op", default="fft",
-                    choices=["fft", "polymul", "polymul-real"])
+                    choices=["fft", "polymul", "polymul-real",
+                             "polymul-mod"])
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=32)

@@ -213,6 +213,39 @@ def test_pallas_kernel_equals_oracle_property(n, seed):
 
 
 # ---------------------------------------------------------------------------
+# Planner contract: loud rejection + the exact (NTT) route
+# ---------------------------------------------------------------------------
+
+def test_planner_rejects_non_power_of_two():
+    """plan() must raise, not silently mis-plan (asserts vanish under -O)."""
+    from repro.core import fft as fcore
+    for bad in (48, 0, -8, 1536):
+        with pytest.raises(ValueError):
+            fcore.plan(bad, batch=8)
+    with pytest.raises(ValueError):
+        fcore.plan(1024, batch=-1)
+
+
+def test_planner_exact_route():
+    from repro.core import fft as fcore
+    p = fcore.plan(4096, batch=64, exact=True)
+    assert p.exact and p.tier == "local" and p.radix == 2
+    assert "NTT" in p.describe()
+    # the float route is unchanged by the new field
+    f = fcore.plan(4096, batch=64)
+    assert not f.exact and f.radix == 4
+
+
+def test_ops_ifft_roundtrip_both_backends(rng):
+    """Inverse-transform round-trip through the public ops layer."""
+    x = _rand_complex(rng, (3, 128)).astype(np.complex64)
+    for backend in ("xla", "pallas"):
+        y = kops.fft(jnp.asarray(x), backend=backend)
+        z = np.asarray(kops.ifft(y, backend=backend))
+        np.testing.assert_allclose(z, x, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # 2-D extension (signal processing application of the paper's primitive)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,228 @@
+"""PIM NTT cost-model tier: closed-form latency == simulator counters for
+all three layouts (the parity contract tests/test_pim.py enforces for the
+float FFT), throughput monotonicity in beta, the negacyclic polymul
+structure, and the counter-ORDERING regression that pinned the fft_2rbeta
+perm-charge placement fix."""
+import numpy as np
+import pytest
+
+from repro.core.ntt import ref
+from repro.core.pim import (FOURIERPIM_8, FP32, INT16, INT32,
+                            batched_ntt_stats, fft_2r, fft_2rbeta,
+                            ntt_latency_cycles, ntt_polymul_latency_cycles,
+                            ntt_throughput_per_s, pim_ntt, pim_ntt_polymul,
+                            r_fft, with_partitions)
+from repro.core.pim import aritpim, ntt_pim
+
+
+def _layout_cases(spec):
+    """(n, layout_fn) per configuration; 16-bit moduli only exist below
+    2^16, which caps the valid n for INT16 value-level runs."""
+    cases = [(1024, ntt_pim.r_ntt), (2048, ntt_pim.ntt_2r),
+             (4096, ntt_pim.ntt_2rbeta), (16384, ntt_pim.ntt_2rbeta)]
+    if spec.word_bits < 32:
+        cases = [c for c in cases if c[0] <= 2048]
+    return cases
+
+
+def _make_params(n, spec):
+    bits = 30 if spec.word_bits >= 32 else 14
+    return ref.NTTParams.make(n, bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# Values exact, closed form == counters, all layouts x partitions x words
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [INT32, INT16])
+@pytest.mark.parametrize("p", [1, 2, 4])
+def test_closed_form_latency_matches_simulator(rng, spec, p):
+    cfg = with_partitions(FOURIERPIM_8, p)
+    for n, layout in _layout_cases(spec):
+        params = _make_params(n, spec)
+        x = rng.integers(0, params.q, size=n)
+        res = layout(x, params, cfg, spec)
+        assert (res.output == ref.ntt(x, params)).all(), (n, layout.__name__)
+        assert res.counters.cycles == ntt_latency_cycles(n, cfg, spec), \
+            (n, layout.__name__, p)
+        inv = layout(res.output, params, cfg, spec, inverse=True)
+        assert (inv.output == x.astype(np.uint64)).all()
+        assert inv.counters.cycles == ntt_latency_cycles(n, cfg, spec,
+                                                         inverse=True)
+
+
+def test_pim_ntt_rejects_float_input():
+    """Same loud-failure contract as the reference: truncating floats into
+    an 'exact' transform would be a silent lie."""
+    params = _make_params(1024, INT32)
+    with pytest.raises(TypeError):
+        pim_ntt(np.ones(1024, np.float64), params, FOURIERPIM_8, INT32)
+
+
+@pytest.mark.parametrize("n", [1024, 2048, 8192])
+def test_pim_ntt_dispatch_roundtrip(rng, n):
+    params = _make_params(n, INT32)
+    x = rng.integers(0, params.q, size=n)
+    f = pim_ntt(x, params, FOURIERPIM_8, INT32)
+    b = pim_ntt(f.output, params, FOURIERPIM_8, INT32, inverse=True)
+    assert (b.output == x.astype(np.uint64)).all()
+
+
+@pytest.mark.parametrize("negacyclic", [True, False])
+def test_polymul_closed_form_matches_simulator(rng, negacyclic):
+    n = 4096
+    params = _make_params(n, INT32)
+    a = rng.integers(0, params.q, size=n)
+    b = rng.integers(0, params.q, size=n)
+    res = pim_ntt_polymul(a, b, params, FOURIERPIM_8, INT32,
+                          negacyclic=negacyclic)
+    fn = ref.negacyclic_polymul if negacyclic else ref.cyclic_polymul
+    assert (res.output == fn(a, b, params)).all()
+    assert res.counters.cycles == ntt_polymul_latency_cycles(
+        n, FOURIERPIM_8, INT32, negacyclic=negacyclic)
+
+
+def test_negacyclic_premium_is_three_modmuls():
+    """Twist/untwist structure: negacyclic = cyclic + 3 serialized modmuls
+    (psi twist x2 + psi^-1 untwist; the 1/n rides the inverse transform)."""
+    n = 8192
+    beta_serial = n // (2 * FOURIERPIM_8.crossbar_rows)
+    cyc = ntt_polymul_latency_cycles(n, FOURIERPIM_8, INT32,
+                                     negacyclic=False)
+    nega = ntt_polymul_latency_cycles(n, FOURIERPIM_8, INT32)
+    assert nega - cyc == 3 * aritpim.mod_mul_cycles(INT32) * beta_serial
+
+
+def test_polymul_skips_input_permutations():
+    """§5 analogue: polymul transforms charge no bit-reversal (DIT/DIF
+    cancellation), so 3 transforms + 4 modmuls is the whole budget."""
+    n = 4096
+    no_perm = ntt_latency_cycles(n, FOURIERPIM_8, INT32, charge_perm=False)
+    with_perm = ntt_latency_cycles(n, FOURIERPIM_8, INT32, charge_perm=True)
+    assert no_perm < with_perm
+    inv_np = ntt_latency_cycles(n, FOURIERPIM_8, INT32, charge_perm=False,
+                                inverse=True)
+    serial = n // (2 * FOURIERPIM_8.crossbar_rows)
+    pm = ntt_polymul_latency_cycles(n, FOURIERPIM_8, INT32)
+    assert pm == (2 * no_perm + inv_np
+                  + 4 * aritpim.mod_mul_cycles(INT32) * serial)
+
+
+# ---------------------------------------------------------------------------
+# Throughput trends
+# ---------------------------------------------------------------------------
+
+def test_throughput_monotone_decreasing_in_beta():
+    """Serial beta units: throughput strictly falls as n (hence beta)
+    grows, and the drop is superlinear without partitions."""
+    ths = [ntt_throughput_per_s(n, FOURIERPIM_8, INT32)
+           for n in (2048, 4096, 8192, 16384)]
+    assert all(a > b for a, b in zip(ths, ths[1:])), ths
+    assert ths[0] / ths[-1] > 3.0
+
+
+def test_partitions_flatten_beta_serialization():
+    n = 16384  # beta = 8
+    lats = [ntt_latency_cycles(n, with_partitions(FOURIERPIM_8, p), INT32)
+            for p in (1, 2, 4)]
+    assert lats[0] > lats[1] > lats[2]
+    assert lats[0] / lats[2] <= 4.0 + 1e-9   # speedup bounded by p
+
+
+def test_int_words_halve_area_vs_float():
+    """A 32-bit residue word is half the 64-bit complex float word: the
+    NTT occupies half the crossbar area at equal n (extra batch capacity
+    once the float layout spills) and reaches 2x the sequence length
+    before hitting the crossbar-width wall."""
+    n = 16384
+    word_f = aritpim.complex_word_bits(FP32)
+    area_int = FOURIERPIM_8.crossbars_per_fft(n, INT32.word_bits)
+    area_float = FOURIERPIM_8.crossbars_per_fft(n, word_f)
+    assert area_int == pytest.approx(area_float / 2)
+    assert FOURIERPIM_8.batch_capacity(n, INT32.word_bits) \
+        >= FOURIERPIM_8.batch_capacity(n, word_f)
+    assert FOURIERPIM_8.valid_config(32768, INT32.word_bits)
+    assert not FOURIERPIM_8.valid_config(32768, word_f)
+
+
+def test_batched_ntt_stats_full_wave_matches_closed_form():
+    st = batched_ntt_stats(2048, None, FOURIERPIM_8, INT32)
+    assert st["waves"] == 1 and st["utilization"] == 1.0
+    want = ntt_throughput_per_s(2048, FOURIERPIM_8, INT32)
+    assert st["throughput_per_s"] == pytest.approx(want, rel=1e-6)
+    ragged = batched_ntt_stats(2048, st["arrays_per_device"] + 1,
+                               FOURIERPIM_8, INT32)
+    assert ragged["waves"] == 2 and ragged["utilization"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Counter-ordering regression (the fft_2rbeta perm-placement fix)
+# ---------------------------------------------------------------------------
+
+def _first_index(log, tag):
+    for i, (t, _) in enumerate(log):
+        if t == tag:
+            return i
+    raise AssertionError(f"no {tag!r} charge in log: {log[:6]}...")
+
+
+@pytest.mark.parametrize("case", ["r", "2r", "2rbeta"])
+def test_fft_perm_charged_before_first_butterfly(rng, case):
+    """All three float-FFT layouts must charge the input bit-reversal
+    BEFORE any butterfly; fft_2rbeta used to charge it after the group
+    loop (totals identical, ordering wrong)."""
+    fn, n = {"r": (r_fft, 1024), "2r": (fft_2r, 2048),
+             "2rbeta": (fft_2rbeta, 4096)}[case]
+    x = rng.standard_normal(n) + 1j * rng.standard_normal(n)
+    res = fn(x, FOURIERPIM_8, FP32)
+    assert _first_index(res.log, "perm") < _first_index(res.log, "butterfly")
+    assert res.log[-1][0] != "perm", "perm must not trail the group loop"
+
+
+@pytest.mark.parametrize("case", ["r", "2r", "2rbeta"])
+def test_ntt_perm_charged_before_first_butterfly(rng, case):
+    fn, n = {"r": (ntt_pim.r_ntt, 1024), "2r": (ntt_pim.ntt_2r, 2048),
+             "2rbeta": (ntt_pim.ntt_2rbeta, 4096)}[case]
+    params = _make_params(n, INT32)
+    x = rng.integers(0, params.q, size=n)
+    res = fn(x, params, FOURIERPIM_8, INT32)
+    assert _first_index(res.log, "perm") < _first_index(res.log, "butterfly")
+    assert res.log[-1][0] != "perm"
+
+
+def test_perm_placement_preserves_totals(rng):
+    """The ordering fix must not change totals: 2rbeta closed form still
+    equals the simulator (guards against fixing ordering by dropping or
+    double-charging the permutation)."""
+    n = 8192
+    x = rng.standard_normal(n) + 1j * rng.standard_normal(n)
+    from repro.core.pim import fft_latency_cycles
+    res = fft_2rbeta(x, FOURIERPIM_8, FP32)
+    assert res.counters.cycles == fft_latency_cycles(n, FOURIERPIM_8, FP32)
+    perm_cycles = sum(c for t, c in res.log if t == "perm")
+    no_perm = fft_2rbeta(x, FOURIERPIM_8, FP32, charge_perm=False)
+    assert res.counters.cycles - no_perm.counters.cycles == perm_cycles
+
+
+# ---------------------------------------------------------------------------
+# Integer cost-model structure
+# ---------------------------------------------------------------------------
+
+def test_modular_op_cost_structure():
+    """Pins the documented derivations: Barrett modmul = 3 muls + 2 adds
+    + 4, butterfly = modmul + 2 modadds, and the op_cycles dispatch."""
+    w = INT32.word_bits
+    assert aritpim.mod_add_cycles(INT32) == 2 * (9 * w + 1) + 2
+    assert aritpim.mod_mul_cycles(INT32) == (3 * (12 * w * w + 3 * w)
+                                             + 2 * (9 * w + 1) + 4)
+    assert aritpim.ntt_butterfly_cycles(INT32) == (
+        aritpim.mod_mul_cycles(INT32) + 2 * aritpim.mod_add_cycles(INT32))
+    assert aritpim.op_cycles("butterfly", INT32) \
+        == aritpim.ntt_butterfly_cycles(INT32)
+    assert aritpim.op_cycles("copy", INT32) == 2 * w
+    assert aritpim.storage_word_bits(INT32) == 32
+    assert aritpim.storage_word_bits(FP32) == 64
+    # no IEEE overhead: the integer butterfly at 16-bit words is far below
+    # the fp16 complex butterfly
+    assert aritpim.ntt_butterfly_cycles(INT16) \
+        < aritpim.butterfly_cycles(aritpim.FP16)
