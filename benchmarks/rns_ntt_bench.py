@@ -1,0 +1,76 @@
+"""Multi-limb RNS/CRT polymul sweep: the FHE-scale companion of ntt/*.
+
+Sweeps target modulus widths (60..180 bits — the CKKS/BGV modulus-chain
+range) at n in {1K..4K} and emits, per (bits, n):
+
+    rns/n=<n>/Q<bits>b,  us_per_call,  limbs=..;waves=..;throughput=..
+    rns/n=<n>/Q<bits>b/premium, 0,     rns_vs_single_word=..x
+
+The latency row is the closed-form PIM wave schedule (k limbs over the
+crossbar pool, ``rns_polymul_wave_stats``); the premium row is total RNS
+cycles vs one single-word polymul at the same n — the structural cost of
+exactness past one machine word (k limb transforms for a k-limb Q). A
+bit-exact check of the fused limb-batched kernel against the python big-int
+schoolbook oracle runs at a reduced size so the sweep can't silently rot.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.runlib import emit
+from repro.core.ntt.rns import (RNSParams, random_poly, rns_polymul,
+                                schoolbook_polymul_mod)
+from repro.core.pim import (FOURIERPIM_8, INT32, ntt_polymul_latency_cycles,
+                            rns_polymul_latency_cycles,
+                            rns_polymul_wave_stats)
+
+DIMS = (1024, 2048, 4096)
+MODULUS_BITS = (60, 120, 180)
+
+
+def exactness_check(n: int = 64, modulus_bits: int = 100) -> RNSParams:
+    """Fused kernel == big-int schoolbook mod Q (negacyclic), tiny n."""
+    rns = RNSParams.make(n, modulus_bits=modulus_bits)
+    rng = np.random.default_rng(7)
+    a = random_poly(rng, n, rns.modulus)
+    b = random_poly(rng, n, rns.modulus)
+    got = rns_polymul(a, b, rns)
+    want = schoolbook_polymul_mod(a, b, rns.modulus)
+    assert (got == want).all(), "RNS polymul mismatch vs big-int oracle"
+    return rns
+
+
+def run() -> dict:
+    """Returns {(modulus_bits, n): row-dict} for tests / EXPERIMENTS.md."""
+    out = {}
+    rns_small = exactness_check()
+    emit("rns/exact/n=64", 0.0,
+         f"limbs={rns_small.k};Q_bits={rns_small.modulus.bit_length()}"
+         f";exact=bit")
+    for n in DIMS:
+        single = ntt_polymul_latency_cycles(n, FOURIERPIM_8, INT32)
+        for bits in MODULUS_BITS:
+            rns = RNSParams.make(n, modulus_bits=bits)
+            st = rns_polymul_wave_stats(n, rns.k, FOURIERPIM_8, INT32)
+            lat_us = st["latency_s"] * 1e6
+            emit(f"rns/n={n}/Q{bits}b", lat_us,
+                 f"limbs={rns.k};waves={st['waves']}"
+                 f";throughput={st['throughput_per_s']:.3e}"
+                 f";utilization={st['utilization']:.2f}")
+            total = rns_polymul_latency_cycles(n, rns.k, FOURIERPIM_8, INT32)
+            emit(f"rns/n={n}/Q{bits}b/premium", 0.0,
+                 f"rns_vs_single_word={total / single:.2f}x"
+                 f";total_cycles={total}")
+            out[(bits, n)] = {
+                "limbs": rns.k,
+                "waves": st["waves"],
+                "latency_us": lat_us,
+                "throughput_per_s": st["throughput_per_s"],
+                "rns_vs_single_word": total / single,
+            }
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -66,6 +66,17 @@ def smoke() -> None:
     assert (got == want.astype(np.uint32)).all(), "NTT polymul mismatch"
     emit("smoke/ntt_polymul/n=64", 0.0, f"q={params.q};exact=bit")
 
+    # 2b. Multi-limb RNS route: the limb-batched kernel must stay bit-exact
+    #     against the python big-int schoolbook oracle (k limbs, Q > 2^100),
+    #     and the limb wave schedule must go through dist.batching.
+    from benchmarks import rns_ntt_bench
+    from repro.core.pim import rns_polymul_wave_stats
+    rns = rns_ntt_bench.exactness_check(n=64, modulus_bits=100)
+    rst = rns_polymul_wave_stats(2048, rns.k, FOURIERPIM_8, INT32)
+    emit("smoke/rns_polymul/n=64", 0.0,
+         f"limbs={rns.k};Q_bits={rns.modulus.bit_length()};exact=bit"
+         f";waves_at_2048={rst['waves']}")
+
     # 3. XLA FFT wall-clock at a reduced shape (structure check only).
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((8, 1024))
@@ -88,10 +99,11 @@ def smoke() -> None:
 
 def full() -> None:
     from benchmarks import (fft_pim_bench, ntt_pim_bench, polymul_pim_bench,
-                            roofline, tpu_fft_bench)
+                            rns_ntt_bench, roofline, tpu_fft_bench)
     fft_pim_bench.run()
     polymul_pim_bench.run()
     ntt_pim_bench.run()
+    rns_ntt_bench.run()
     tpu_fft_bench.run()
     if os.path.isdir(os.path.join("artifacts", "dryrun", "singlepod")):
         roofline.run("singlepod")

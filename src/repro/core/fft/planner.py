@@ -41,17 +41,22 @@ class FFTPlan:
 
 # A single sequence must keep ~2 fp32 planes x live factor in VMEM.
 _MAX_LOCAL_N = VMEM_BUDGET_BYTES // (2 * 4 * 4)   # = 256K points
+# Exact tier: one uint32 residue plane, ~4 live copies in the fused polymul
+# (operands + transforms) — twice the float threshold per byte of VMEM.
+_MAX_LOCAL_N_EXACT = VMEM_BUDGET_BYTES // (4 * 4)  # = 512K points
 
 
 def plan(n: int, batch: int, *, model_shards: int = 1,
          exact: bool = False) -> FFTPlan:
     """Execution plan for a batch of n-point transforms.
 
-    ``exact=True`` routes to the modular-NTT kernel (uint32 residues,
-    radix-2 only — the Montgomery butterfly has no radix-4 shortcut worth
-    the lane pressure). The exact tier is always local: the four-step
-    distributed decomposition needs twiddle factors between steps, which
-    for the NTT is a different root-of-unity per shard — future work.
+    ``exact=True`` routes to the modular-NTT tier (uint32 residues, radix-2
+    only — the Montgomery butterfly has no radix-4 shortcut worth the lane
+    pressure): the local Pallas kernel (``kernels.ntt``) while a sequence
+    fits VMEM, else the four-step distributed decomposition
+    (``core.ntt.distributed``) with per-shard roots
+    (``NTTParams.subparams``) and ledger-accounted all-to-alls — the plan
+    comes back with ``seq_shards > 1`` and ``exact=True``.
     Raises ValueError on non-power-of-two n so misuse fails loudly instead
     of silently mis-planning (asserts vanish under ``python -O``).
     """
@@ -60,8 +65,12 @@ def plan(n: int, batch: int, *, model_shards: int = 1,
     if batch < 0:
         raise ValueError(f"batch={batch} must be non-negative")
     if exact:
-        return FFTPlan(tier="local", radix=2,
-                       block_b=plan_batch_block(n), seq_shards=1, exact=True)
+        if n <= _MAX_LOCAL_N_EXACT or model_shards == 1:
+            return FFTPlan(tier="local", radix=2,
+                           block_b=plan_batch_block(n), seq_shards=1,
+                           exact=True)
+        return FFTPlan(tier="distributed", radix=2, block_b=1,
+                       seq_shards=model_shards, exact=True)
     radix = 4 if (n.bit_length() - 1) >= 2 else 2
     if n <= _MAX_LOCAL_N or model_shards == 1:
         return FFTPlan(tier="local", radix=radix,

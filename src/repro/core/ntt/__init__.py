@@ -1,22 +1,41 @@
 """Exact modular transforms: the NTT counterpart of ``repro.core.fft``.
 
 Public surface:
-  NTTParams / choose_modulus / root_of_unity     (parameter selection)
+  NTTParams / choose_modulus / root_of_unity     (parameter selection;
+      NTTParams.subparams gives the four-step per-shard roots)
   ntt / intt / cyclic_polymul / negacyclic_polymul  (exact reference)
   schoolbook_polymul                             (independent O(n^2) oracle)
+  RNSParams / rns_polymul / crt_to_modulus       (multi-limb RNS/CRT layer
+      for 100+ bit moduli; big-int oracle in rns.schoolbook_polymul_mod)
+  make_sharded_ntt / make_sharded_ntt_polymul    (distributed four-step NTT)
 
-The production kernel lives in ``repro.kernels.ntt``; the PIM cost model in
-``repro.core.pim.ntt_pim``; semantics and modulus-selection rules are
-documented in docs/ntt.md.
+The production kernels live in ``repro.kernels.ntt`` (including the
+limb-batched ``rns_ntt_polymul``); the PIM cost model in
+``repro.core.pim.ntt_pim``; semantics, modulus-selection and limb-selection
+rules are documented in docs/ntt.md.
 """
 from repro.core.ntt.ref import (NTTParams, as_residues, bit_reverse_indices,
                                 choose_modulus, cyclic_polymul, intt,
                                 is_prime, negacyclic_polymul, ntt,
                                 primitive_root, root_of_unity,
                                 schoolbook_polymul)
+from repro.core.ntt.rns import (RNSParams, crt_reconstruct,
+                                crt_reconstruct_u64, crt_to_modulus,
+                                garner_digits, ntt_limb_primes, rns_polymul,
+                                rns_polymul_reference, schoolbook_polymul_mod,
+                                to_rns)
+from repro.core.ntt.distributed import (four_step_collective_stats,
+                                        make_sharded_ntt,
+                                        make_sharded_ntt_polymul,
+                                        ntt_distributed)
 
 __all__ = [
     "NTTParams", "as_residues", "bit_reverse_indices", "choose_modulus",
     "cyclic_polymul", "intt", "is_prime", "negacyclic_polymul", "ntt",
     "primitive_root", "root_of_unity", "schoolbook_polymul",
+    "RNSParams", "crt_reconstruct", "crt_reconstruct_u64", "crt_to_modulus",
+    "garner_digits", "ntt_limb_primes", "rns_polymul",
+    "rns_polymul_reference", "schoolbook_polymul_mod", "to_rns",
+    "four_step_collective_stats", "make_sharded_ntt",
+    "make_sharded_ntt_polymul", "ntt_distributed",
 ]

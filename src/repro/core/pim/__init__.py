@@ -19,12 +19,19 @@ from repro.core.pim.polymul_pim import (PIMPolymulResult, pim_polymul,
                                         polymul_energy_j_per_op,
                                         polymul_latency_cycles,
                                         polymul_throughput_per_s)
-from repro.core.pim.ntt_pim import (PIMNTTResult, batched_ntt_stats,
-                                    ntt_2r, ntt_2rbeta, ntt_energy_j_per_op,
+from repro.core.pim.ntt_pim import (PIMDistNTTResult, PIMNTTResult,
+                                    PIMRNSResult, batched_ntt_stats,
+                                    ntt_2r, ntt_2rbeta,
+                                    ntt_distributed_a2a_bytes,
+                                    ntt_distributed_latency_cycles,
+                                    ntt_energy_j_per_op,
                                     ntt_latency_cycles,
                                     ntt_polymul_latency_cycles,
                                     ntt_throughput_per_s, pim_ntt,
-                                    pim_ntt_polymul, r_ntt)
+                                    pim_ntt_distributed, pim_ntt_polymul,
+                                    pim_rns_polymul, r_ntt,
+                                    rns_polymul_latency_cycles,
+                                    rns_polymul_wave_stats)
 from repro.core.pim import gpu_model
 
 __all__ = [
@@ -37,8 +44,11 @@ __all__ = [
     "fft_energy_j_per_op", "fft_latency_cycles", "fft_throughput_per_s",
     "pim_fft", "r_fft", "PIMPolymulResult", "pim_polymul",
     "pim_polymul_real", "polymul_energy_j_per_op", "polymul_latency_cycles",
-    "polymul_throughput_per_s", "PIMNTTResult", "batched_ntt_stats",
-    "ntt_2r", "ntt_2rbeta", "ntt_energy_j_per_op", "ntt_latency_cycles",
+    "polymul_throughput_per_s", "PIMDistNTTResult", "PIMNTTResult",
+    "PIMRNSResult", "batched_ntt_stats", "ntt_2r", "ntt_2rbeta",
+    "ntt_distributed_a2a_bytes", "ntt_distributed_latency_cycles",
+    "ntt_energy_j_per_op", "ntt_latency_cycles",
     "ntt_polymul_latency_cycles", "ntt_throughput_per_s", "pim_ntt",
-    "pim_ntt_polymul", "r_ntt", "gpu_model",
+    "pim_ntt_distributed", "pim_ntt_polymul", "pim_rns_polymul", "r_ntt",
+    "rns_polymul_latency_cycles", "rns_polymul_wave_stats", "gpu_model",
 ]

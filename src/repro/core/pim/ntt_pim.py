@@ -257,13 +257,22 @@ def ntt_throughput_per_s(n: int, cfg: PIMConfig, spec: aritpim.IntSpec
     return cfg.batch_capacity(n, spec.word_bits) * cfg.concurrency / lat
 
 
+def _arrays_per_device(n: int, cfg: PIMConfig,
+                       spec: aritpim.IntSpec) -> int:
+    """Concurrent n-point modular transforms one device can run: memory
+    capacity discounted by controller issue concurrency. The one definition
+    every NTT wave plan uses (batched stats, RNS limb scheduling) — the
+    sim-side plans and the closed-form stats must not each re-derive it."""
+    return max(1, int(cfg.batch_capacity(n, spec.word_bits)
+                      * cfg.concurrency))
+
+
 def batched_ntt_stats(n: int, batch: int | None, cfg: PIMConfig,
                       spec: aritpim.IntSpec, *, mesh=None) -> dict:
     """Schedule a batch of B n-point NTTs through the same
     ``repro.dist.batching`` wave scheduler as ``batched_fft_stats``."""
     from repro.dist import batching
-    num_arrays = max(1, int(cfg.batch_capacity(n, spec.word_bits)
-                            * cfg.concurrency))
+    num_arrays = _arrays_per_device(n, cfg, spec)
     if batch is None:        # one full wave everywhere: the steady state
         n_dev = (batching.shard_batch(0, mesh).n_devices
                  if mesh is not None else 1)
@@ -286,3 +295,212 @@ def ntt_energy_j_per_op(n: int, cfg: PIMConfig, spec: aritpim.IntSpec,
     x = np.random.default_rng(0).integers(0, params.q, size=n)
     res = pim_ntt(x, params, cfg, spec)
     return res.counters.energy_j(cfg)
+
+
+# ---------------------------------------------------------------------------
+# RNS: k-limb polymul, limbs scheduled as waves over the crossbar pool
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PIMRNSResult:
+    """Per-limb products + CRT result + summed cost counters + limb plan."""
+    outputs: np.ndarray          # (k, n) uint64 per-limb residue products
+    result: np.ndarray           # (n,) object: exact coefficients mod Q
+    counters: Counters           # total work: sum over limbs
+    plan: object                 # CrossbarBatchPlan of limbs onto arrays
+
+
+def pim_rns_polymul(a, b, rns, cfg: PIMConfig, spec: aritpim.IntSpec, *,
+                    negacyclic: bool = True, mesh=None) -> PIMRNSResult:
+    """Multi-limb exact polymul mod Q on the simulator: each limb is one
+    independent single-word ``pim_ntt_polymul`` (limbs are embarrassingly
+    parallel — one limb per crossbar), scheduled as waves through
+    ``dist.batching`` like any other transform batch. Counters are the SUM
+    of the per-limb simulators (total work); wave latency comes from the
+    plan (``rns_polymul_wave_stats`` is the closed form)."""
+    from repro.core.ntt.rns import crt_to_modulus, to_rns
+    ar = to_rns(a, rns)
+    br = to_rns(b, rns)
+    outs = np.empty((rns.k, rns.n), np.uint64)
+    cycles = gates = 0
+    for i, params in enumerate(rns.limbs):
+        res = pim_ntt_polymul(ar[i], br[i], params, cfg, spec,
+                              negacyclic=negacyclic)
+        outs[i] = res.output
+        cycles += res.counters.cycles
+        gates += res.counters.gates
+    stats = rns_polymul_wave_stats(rns.n, rns.k, cfg, spec,
+                                   negacyclic=negacyclic, mesh=mesh)
+    return PIMRNSResult(outputs=outs, result=crt_to_modulus(outs, rns),
+                        counters=Counters(cycles=cycles, gates=gates),
+                        plan=stats["plan"])
+
+
+def rns_polymul_latency_cycles(n: int, k: int, cfg: PIMConfig,
+                               spec: aritpim.IntSpec, *,
+                               negacyclic: bool = True) -> int:
+    """Total simulator cycles of a k-limb RNS polymul: exactly k times the
+    single-word fused polymul (asserted == summed counters in tests)."""
+    return k * ntt_polymul_latency_cycles(n, cfg, spec,
+                                          negacyclic=negacyclic)
+
+
+def rns_polymul_wave_stats(n: int, k: int, cfg: PIMConfig,
+                           spec: aritpim.IntSpec, *, negacyclic: bool = True,
+                           mesh=None) -> dict:
+    """Wall-clock view of the limb schedule: k limbs over the crossbar pool
+    run in ``waves`` wavefronts of one fused polymul each."""
+    from repro.dist import batching
+    plan = batching.plan_crossbar_batch(
+        k, num_arrays=_arrays_per_device(n, cfg, spec), mesh=mesh)
+    wave_latency_s = (ntt_polymul_latency_cycles(n, cfg, spec,
+                                                 negacyclic=negacyclic)
+                      / cfg.clock_hz)
+    return {
+        **plan.report(),
+        "plan": plan,
+        "n": n,
+        "limbs": k,
+        "wave_latency_s": wave_latency_s,
+        "latency_s": plan.latency(wave_latency_s),
+        "throughput_per_s": plan.throughput(wave_latency_s),
+        "total_cycles": rns_polymul_latency_cycles(n, k, cfg, spec,
+                                                   negacyclic=negacyclic),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Distributed four-step NTT (n = n1 * n2 over D crossbar shards)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PIMDistNTTResult:
+    """Four-step NTT across D shards: values + per-shard counters + bytes."""
+    output: np.ndarray                 # (n,) uint64, natural order
+    shard_counters: tuple              # one Counters per shard (all equal)
+    a2a_bytes: int                     # inter-array transpose traffic, total
+    logs: tuple = ()                   # per-shard (tag, cycles) charge logs
+
+    @property
+    def latency_cycles(self) -> int:
+        """Shards run in parallel: latency is one shard's cycles (symmetric
+        by construction, asserted in tests)."""
+        return max(c.cycles for c in self.shard_counters)
+
+
+def _phase_a_ntt(sim: CrossbarSim, block: np.ndarray, p1: NTTParams,
+                 active_rows: int) -> np.ndarray:
+    """Step-2 column transforms: NTT_{n1} along axis 0 of the (n1, n2/D)
+    shard block, every column in parallel (one vectored butterfly per
+    stage). Charged exactly like an r-layout stage: twiddle writes + two
+    copy/row-move pairs + one butterfly op. The bit-reversal of the n1
+    rows is NOT charged — the step-1 transpose delivery order absorbs it
+    (the inter-array move places rows wherever the algorithm wants)."""
+    q = np.uint64(p1.q)
+    n1 = p1.n
+    y = block[_bit_reverse_perm(n1)].copy()
+    pw = p1.powers(p1.w)
+    for s in range(n1.bit_length() - 1):
+        m = 2 << s
+        half = m >> 1
+        idx = np.arange(n1).reshape(n1 // m, m)
+        top = idx[:, :half].ravel()
+        bot = idx[:, half:].ravel()
+        w = np.tile(pw[(n1 // m) * np.arange(half)], n1 // m)[:, None]
+        sim.charge_twiddle_writes(active_rows)
+        sim.charge_column_op("copy", active_rows)
+        sim.charge_row_ops(active_rows, cycles_per_row=2)
+        sim.charge_column_op("copy", active_rows)
+        sim.charge_row_ops(active_rows, cycles_per_row=2)
+        u, v = sim.butterfly_rows_mod(y[top], y[bot], w, p1.q, active_rows)
+        y[top], y[bot] = u, v
+    assert (y < q).all()
+    return y
+
+
+def pim_ntt_distributed(x: np.ndarray, params: NTTParams, n_shards: int,
+                        cfg: PIMConfig, spec: aritpim.IntSpec
+                        ) -> PIMDistNTTResult:
+    """Four-step NTT across ``n_shards`` crossbar arrays, value-exact.
+
+    n = n1 * n2 with n1 = D shards and n2 = n / D = crossbar rows (each
+    shard's working set is exactly one column of the array). Per-shard
+    roots come from ``NTTParams.subparams``; the two inter-array transposes
+    are periphery moves charged as BYTES (``a2a_bytes``, the ledger unit of
+    the TPU path), not cycles. Matches ``ref.ntt`` exactly and the closed
+    forms ``ntt_distributed_latency_cycles`` / ``ntt_distributed_a2a_bytes``
+    (tests/test_pim_ntt.py).
+    """
+    n = params.n
+    D = n_shards
+    if D < 2 or D & (D - 1):
+        raise ValueError(f"n_shards={D} must be a power of two >= 2")
+    n2 = n // D
+    assert n2 == cfg.crossbar_rows, \
+        f"four-step PIM wants n/D == rows ({cfg.crossbar_rows}), got {n2}"
+    p1 = params.subparams(D)
+    p2 = params.subparams(n2)
+    q = np.uint64(params.q)
+    sims = [CrossbarSim(cfg, spec) for _ in range(D)]
+    M = _residues(x, params.q).reshape(D, n2)          # row j1
+    wcol = n2 // D
+    # Step 1 transpose: shard s owns all j1 for j2 slice s.
+    blocks = [M[:, s * wcol:(s + 1) * wcol].copy() for s in range(D)]
+    pw = params.powers(params.w)
+    for s, sim in enumerate(sims):
+        y = _phase_a_ntt(sim, blocks[s], p1, active_rows=n2 // 2)
+        # Step 3: twiddle w^{j2 k1} with GLOBAL j2 — one column-parallel
+        # modmul over the shard's full working set.
+        j2 = np.arange(s * wcol, (s + 1) * wcol)
+        k1 = np.arange(D)[:, None]
+        tw = pw[(k1 * j2[None, :]) % n]
+        blocks[s] = (y * tw) % q
+        sim.charge_column_op("modmul", cfg.crossbar_rows)
+    # Step 4 transpose: shard s owns row k1 = s, all j2.
+    Y = np.concatenate(blocks, axis=1)                 # (D=k1, n2=j2)
+    Z = np.empty((D, n2), np.uint64)
+    for s, sim in enumerate(sims):
+        def transition(stage):
+            sim.charge_column_op("copy", n2 // 2)
+            sim.charge_row_ops(n2 // 2, cycles_per_row=2)
+            sim.charge_column_op("copy", n2 // 2)
+            sim.charge_row_ops(n2 // 2, cycles_per_row=2)
+        sim.charge_row_ops(_perm_swap_count(n2), cycles_per_row=6,
+                           tag="perm")
+        Z[s] = _ntt_groups(sim, Y[s], p2, inverse=False, serial_units=1,
+                           active_rows=n2 // 2, transition_fn=transition)
+    # X[k1 + k2 n1] = Z[k1, k2]: natural-order assembly (host-side view).
+    out = Z.T.reshape(n)
+    return PIMDistNTTResult(
+        output=out,
+        shard_counters=tuple(s.ctr for s in sims),
+        a2a_bytes=ntt_distributed_a2a_bytes(n, D, spec),
+        logs=tuple(tuple(s.log) for s in sims))
+
+
+def ntt_distributed_latency_cycles(n: int, n_shards: int, cfg: PIMConfig,
+                                   spec: aritpim.IntSpec) -> int:
+    """Closed-form per-shard cycles of the four-step NTT (== every shard's
+    simulator counter): log2(D) r-layout stages for the column transforms,
+    one twiddle modmul, then a full r-layout NTT of length n/D."""
+    D = n_shards
+    n2 = n // D
+    r = cfg.crossbar_rows
+    assert n2 == r, (n, D, r)
+    word = spec.word_bits
+    stage_a = (r // 2                                  # twiddle writes
+               + 2 * aritpim.copy_cycles(word) + 2 * (r // 2) * 2
+               + aritpim.ntt_butterfly_cycles(spec))
+    phase_a = (D.bit_length() - 1) * stage_a
+    twiddle = aritpim.mod_mul_cycles(spec)
+    phase_b = ntt_latency_cycles(n2, cfg, spec, charge_perm=True)
+    return phase_a + twiddle + phase_b
+
+
+def ntt_distributed_a2a_bytes(n: int, n_shards: int,
+                              spec: aritpim.IntSpec) -> int:
+    """Inter-array transpose traffic of the four-step NTT: two all-to-all
+    transposes, each moving every residue word once (same accounting unit
+    as ``core.ntt.distributed.four_step_collective_stats``)."""
+    del n_shards  # traffic is layout-independent: every word moves twice
+    return 2 * n * (aritpim.storage_word_bits(spec) // 8)

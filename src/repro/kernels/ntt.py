@@ -70,26 +70,33 @@ def _mul32_full(a, b):
     return hi, lo
 
 
-def _mont_mul(a, b, q: int, qinv: int):
+def _u32(v):
+    """uint32 scalar from either a static python int or a traced value (the
+    RNS kernel reads per-limb constants out of a Ref, so q/qinv/r2 arrive as
+    tracers there while the single-modulus kernels keep them static)."""
+    return v if isinstance(v, jax.Array) else jnp.uint32(v)
+
+
+def _mont_mul(a, b, q, qinv):
     """Montgomery product a*b*2^-32 mod q (q odd, < 2^31; qinv = -q^-1 mod
     2^32). With b in Montgomery form this is a*b mod q in one REDC."""
-    qq = jnp.uint32(q)
+    qq = _u32(q)
     hi, lo = _mul32_full(a, b)
-    m = lo * jnp.uint32(qinv)                 # mod 2^32 wrap is the point
+    m = lo * _u32(qinv)                       # mod 2^32 wrap is the point
     mq_hi, _ = _mul32_full(m, qq)
     # lo + (m*q mod 2^32) == 0 mod 2^32 by construction: carry iff lo != 0.
     t = hi + mq_hi + (lo != 0).astype(jnp.uint32)
     return jnp.where(t >= qq, t - qq, t)      # t < 2q always
 
 
-def _add_mod(a, b, q: int):
-    qq = jnp.uint32(q)
+def _add_mod(a, b, q):
+    qq = _u32(q)
     s = a + b                                  # a, b < q < 2^31: no wrap
     return jnp.where(s >= qq, s - qq, s)
 
 
-def _sub_mod(a, b, q: int):
-    return jnp.where(a >= b, a - b, a + jnp.uint32(q) - b)
+def _sub_mod(a, b, q):
+    return jnp.where(a >= b, a - b, a + _u32(q) - b)
 
 
 # ---------------------------------------------------------------------------
@@ -132,6 +139,33 @@ def _ntt_kernel(w_ref, x_ref, o_ref, *, n: int, q: int, qinv: int,
     o_ref[...] = y
 
 
+def _rns_ntt_polymul_kernel(scal_ref, wf_ref, wi_ref, twist_ref, untwist_ref,
+                            a_ref, b_ref, c_ref, *, n: int, negacyclic: bool):
+    """One grid cell = one (limb, batch-block) tile of the RNS polymul.
+
+    Identical dataflow to ``_ntt_polymul_kernel``; the limb's modulus
+    constants are *data* (scal_ref row: q, qinv, r2) instead of closure
+    constants, which is what lets k different-q transforms share a single
+    pallas launch on the (limb, batch) grid.
+    """
+    q = scal_ref[0, 0]
+    qinv = scal_ref[0, 1]
+    r2 = scal_ref[0, 2]
+    wf = wf_ref[...]
+    wi = wi_ref[...]
+    a = a_ref[0]
+    b = b_ref[0]
+    if negacyclic:
+        tw = twist_ref[...]
+        a = _mont_mul(a, tw, q, qinv)
+        b = _mont_mul(b, tw, q, qinv)
+    fa = ntt_stages(a, wf, n=n, q=q, qinv=qinv)
+    fb = ntt_stages(b, wf, n=n, q=q, qinv=qinv)
+    p = _mont_mul(_mont_mul(fa, r2, q, qinv), fb, q, qinv)
+    c = ntt_stages(p, wi, n=n, q=q, qinv=qinv)
+    c_ref[...] = _mont_mul(c, untwist_ref[...], q, qinv)[None]
+
+
 def _ntt_polymul_kernel(wf_ref, wi_ref, twist_ref, untwist_ref,
                         a_ref, b_ref, c_ref, *, n: int, q: int, qinv: int,
                         r2: int, negacyclic: bool):
@@ -162,6 +196,18 @@ def _master_table(params: NTTParams, base: int) -> jnp.ndarray:
     """(1, n) uint32 Montgomery-form powers of ``base``."""
     pw = params.powers(base)
     return jnp.asarray(params.to_montgomery(pw).astype(np.uint32)[None, :])
+
+
+def untwist_table(params: NTTParams, negacyclic: bool) -> np.ndarray:
+    """Output-pass multiplier values (normal domain, uint64): psi^{-j}·n^{-1}
+    for the negacyclic untwist+scale, or the n^{-1} broadcast for cyclic.
+    THE single definition — the fused kernel, the RNS limb tables, and the
+    distributed four-step edge passes all read it from here, so a change to
+    the untwist convention cannot silently diverge per path."""
+    if negacyclic:
+        return (params.powers(params.psi_inv) * np.uint64(params.n_inv)
+                % np.uint64(params.q))
+    return np.full(params.n, params.n_inv, np.uint64)
 
 
 def _as_residues(x, q: int):
@@ -243,15 +289,9 @@ def ntt_polymul(a: jax.Array, b: jax.Array, params: NTTParams, *,
     bp = a.shape[0]
     wf = _master_table(params, params.w)
     wi = _master_table(params, params.w_inv)
-    if negacyclic:
-        twist = _master_table(params, params.psi)
-        un = params.powers(params.psi_inv) * np.uint64(params.n_inv) \
-            % np.uint64(params.q)
-    else:
-        twist = _master_table(params, 1)               # unused in-kernel
-        un = np.full(n, params.n_inv, np.uint64)
-    untwist = jnp.asarray(
-        params.to_montgomery(un).astype(np.uint32)[None, :])
+    twist = _master_table(params, params.psi if negacyclic else 1)
+    untwist = jnp.asarray(params.to_montgomery(
+        untwist_table(params, negacyclic)).astype(np.uint32)[None, :])
     kern = functools.partial(_ntt_polymul_kernel, n=n, q=params.q,
                              qinv=params.qinv, r2=params.r2,
                              negacyclic=negacyclic)
@@ -266,3 +306,77 @@ def ntt_polymul(a: jax.Array, b: jax.Array, params: NTTParams, *,
         interpret=interpret,
     )(wf, wi, twist, untwist, a, bb)
     return c[:bsz] if pad else c
+
+
+# ---------------------------------------------------------------------------
+# RNS: k limbs through one launch on the (limb, batch) grid
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _rns_tables(rns, negacyclic: bool):
+    """Per-limb constant stacks for the RNS kernel, all uint32:
+    scalars (k, 4) = [q, qinv, r2, 0]; wf/wi/twist/untwist (k, n) in
+    Montgomery form. Cached on the hashable RNSParams as NUMPY arrays
+    (caching jnp values across jit traces would leak tracers)."""
+    k, n = rns.k, rns.n
+    scal = np.zeros((k, 4), np.uint32)
+    wf = np.empty((k, n), np.uint32)
+    wi = np.empty((k, n), np.uint32)
+    twist = np.empty((k, n), np.uint32)
+    untwist = np.empty((k, n), np.uint32)
+    for i, p in enumerate(rns.limbs):
+        scal[i] = (p.q, p.qinv, p.r2, 0)
+        wf[i] = p.to_montgomery(p.powers(p.w)).astype(np.uint32)
+        wi[i] = p.to_montgomery(p.powers(p.w_inv)).astype(np.uint32)
+        twist[i] = p.to_montgomery(
+            p.powers(p.psi) if negacyclic
+            else np.ones(n, np.uint64)).astype(np.uint32)    # cyclic: unused
+        untwist[i] = p.to_montgomery(
+            untwist_table(p, negacyclic)).astype(np.uint32)
+    return scal, wf, wi, twist, untwist
+
+
+@functools.partial(jax.jit, static_argnames=("rns", "negacyclic",
+                                             "interpret", "block_b"))
+def rns_ntt_polymul(ar: jax.Array, br: jax.Array, rns, *,
+                    negacyclic: bool = True, interpret: bool = True,
+                    block_b: int | None = None) -> jax.Array:
+    """Limb-batched exact polymul: residue stacks (k, B, n) -> (k, B, n).
+
+    ``rns`` is a ``core.ntt.rns.RNSParams`` (kept opaque here so the kernel
+    layer has no core->kernels cycle); inputs are per-limb REDUCED residues
+    (< q_i each, as ``rns.to_rns`` produces). All k limbs and all batch
+    blocks run through ONE pallas launch: the limb dimension rides the same
+    ``plan_batch_block`` grid the batched single-modulus kernels use, so an
+    8-limb 100-bit-Q product costs one kernel dispatch, not eight.
+    CRT reconstruction (``rns.crt_to_modulus``) lives with the caller.
+    """
+    ar = jnp.asarray(ar)
+    br = jnp.asarray(br)
+    assert ar.shape == br.shape and ar.ndim == 3, (ar.shape, br.shape)
+    assert ar.dtype == jnp.uint32 and br.dtype == jnp.uint32, \
+        "RNS kernel wants pre-reduced uint32 residue stacks (rns.to_rns)"
+    k, bsz, n = ar.shape
+    assert k == rns.k and n == rns.n, (ar.shape, rns.k, rns.n)
+    blk = block_b or max(1, plan_batch_block(n) // 2)  # 3 transforms live
+    pad = (-bsz) % blk
+    if pad:
+        ar = jnp.pad(ar, ((0, 0), (0, pad), (0, 0)))
+        br = jnp.pad(br, ((0, 0), (0, pad), (0, 0)))
+    bp = ar.shape[1]
+    scal, wf, wi, twist, untwist = (jnp.asarray(t) for t in
+                                    _rns_tables(rns, negacyclic))
+    kern = functools.partial(_rns_ntt_polymul_kernel, n=n,
+                             negacyclic=negacyclic)
+    sspec = pl.BlockSpec((1, 4), lambda l, i: (l, 0))
+    wspec = pl.BlockSpec((1, n), lambda l, i: (l, 0))
+    bspec = pl.BlockSpec((1, blk, n), lambda l, i: (l, i, 0))
+    c = pl.pallas_call(
+        kern,
+        grid=(k, bp // blk),
+        in_specs=[sspec, wspec, wspec, wspec, wspec, bspec, bspec],
+        out_specs=bspec,
+        out_shape=jax.ShapeDtypeStruct((k, bp, n), jnp.uint32),
+        interpret=interpret,
+    )(scal, wf, wi, twist, untwist, ar, br)
+    return c[:, :bsz] if pad else c

@@ -17,6 +17,9 @@ Example:
   # exact modular (RLWE negacyclic) polymul endpoint:
   PYTHONPATH=src python -m repro.launch.serve --service fft --n 1024 \
       --batch 32 --requests 128 --op polymul-mod
+  # multi-limb RNS route for FHE-scale moduli (limb count from the bits):
+  PYTHONPATH=src python -m repro.launch.serve --service fft --n 1024 \
+      --batch 8 --requests 16 --op polymul-mod --modulus-bits 120
   PYTHONPATH=src python -m repro.launch.serve --service lm \
       --arch qwen3-1.7b --smoke --prompt-len 32 --gen 32
 """
@@ -49,11 +52,13 @@ class FFTService:
     NTT kernel — bit-exact, so results can feed an RLWE/FHE pipeline.
     """
 
-    def __init__(self, n: int, batch: int, op: str = "fft"):
+    def __init__(self, n: int, batch: int, op: str = "fft",
+                 modulus_bits: int | None = None):
         self.n = n
         self.batch = batch
         self.op = op
         self.ntt_params = None
+        self.rns = None
         self.q: queue.Queue = queue.Queue()
         self.results: dict[int, np.ndarray] = {}
         self.done = threading.Event()
@@ -66,11 +71,25 @@ class FFTService:
             self._fn = jax.jit(
                 lambda a, b: fft_core.polymul(a, b, mode="circular"))
         elif op == "polymul-mod":
-            from repro.core.ntt import NTTParams
-            from repro.kernels import ntt as kntt
-            self.ntt_params = NTTParams.make(n)
-            self._fn = functools.partial(kntt.ntt_polymul,
-                                         params=self.ntt_params)
+            # ``modulus_bits`` is the request-level knob: single-word q
+            # (< 2^31) stays on the fused uint32 kernel; anything wider
+            # routes through the RNS layer, which picks the limb count to
+            # cover Q and runs all limbs in ONE kernel launch.
+            if modulus_bits is not None and modulus_bits > 30:
+                from repro.core.ntt import RNSParams
+                self.rns = RNSParams.make(n, modulus_bits=modulus_bits)
+                from repro.core.ntt import rns_polymul
+                self._fn = functools.partial(rns_polymul, rns=self.rns)
+            else:
+                from repro.core.ntt import NTTParams
+                from repro.kernels import ntt as kntt
+                # <= 30 bits stays single-word and HONORS the request:
+                # choose_modulus validates the width against n and picks
+                # the largest q < 2^modulus_bits (default 30).
+                self.ntt_params = NTTParams.make(
+                    n, bits=30 if modulus_bits is None else modulus_bits)
+                self._fn = functools.partial(kntt.ntt_polymul,
+                                             params=self.ntt_params)
         else:
             raise ValueError(op)
 
@@ -104,6 +123,13 @@ class FFTService:
             if self.op == "fft":
                 x = jnp.asarray(np.stack(pay)).astype(jnp.complex64)
                 out = np.asarray(self._fn(x))
+            elif self.rns is not None:
+                # Big-Q coefficients are python ints (object dtype): the RNS
+                # route splits to per-limb uint32 residues host-side, runs
+                # the limb-batched kernel, and CRT-reconstructs mod Q.
+                a = np.stack([np.asarray(p[0], object) for p in pay])
+                b = np.stack([np.asarray(p[1], object) for p in pay])
+                out = self._fn(a, b)
             else:
                 a = jnp.asarray(np.stack([p[0] for p in pay]))
                 b = jnp.asarray(np.stack([p[1] for p in pay]))
@@ -119,13 +145,18 @@ class FFTService:
 
 def run_fft_service(args) -> dict:
     rng = np.random.default_rng(0)
-    svc = FFTService(args.n, args.batch, args.op)
+    svc = FFTService(args.n, args.batch, args.op,
+                     modulus_bits=args.modulus_bits)
 
     def producer():
         for rid in range(args.requests):
             if args.op == "fft":
                 payload = (rng.standard_normal(args.n)
                            + 1j * rng.standard_normal(args.n))
+            elif args.op == "polymul-mod" and svc.rns is not None:
+                from repro.core.ntt.rns import random_poly
+                payload = (random_poly(rng, args.n, svc.rns.modulus),
+                           random_poly(rng, args.n, svc.rns.modulus))
             elif args.op == "polymul-mod":
                 q = svc.ntt_params.q
                 payload = (rng.integers(0, q, args.n).astype(np.uint32),
@@ -143,7 +174,9 @@ def run_fft_service(args) -> dict:
     rid = 0
     if args.op == "fft":
         pass  # payload not retained; correctness covered by kernel tests
-    print(f"[serve:fft] op={args.op} n={args.n} batch={args.batch} "
+    limbs = f" limbs={svc.rns.k} Q~2^{svc.rns.modulus.bit_length()}" \
+        if svc.rns is not None else ""
+    print(f"[serve:fft] op={args.op}{limbs} n={args.n} batch={args.batch} "
           f"served={stats['served']} in {stats['seconds']:.2f}s "
           f"-> {stats['throughput_per_s']:.1f} req/s")
     return stats
@@ -189,6 +222,10 @@ def main(argv=None):
     ap.add_argument("--op", default="fft",
                     choices=["fft", "polymul", "polymul-real",
                              "polymul-mod"])
+    ap.add_argument("--modulus-bits", type=int, default=None,
+                    help="polymul-mod target modulus width; > 30 routes "
+                         "through the multi-limb RNS/CRT layer (limb count "
+                         "chosen to cover Q, docs/ntt.md)")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=32)

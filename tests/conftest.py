@@ -45,6 +45,14 @@ def run_in_subprocess_devices(snippet: str, n_devices: int = 8,
     return res.stdout
 
 
+def pytest_collection_modifyitems(config, items):
+    """Partition tier-1: anything not explicitly marked ``dist`` is ``unit``,
+    so ``-m unit`` and ``-m dist`` select disjoint, exhaustive halves."""
+    for item in items:
+        if item.get_closest_marker("dist") is None:
+            item.add_marker(pytest.mark.unit)
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

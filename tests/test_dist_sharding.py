@@ -64,6 +64,7 @@ def test_axis_rules_context_restores():
 # constrain under a real dev mesh (subprocess, 8 forced host devices)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.dist
 def test_constrain_roundtrips_specs_under_dev_mesh():
     out = run_in_subprocess_devices("""
 import jax, jax.numpy as jnp
@@ -192,6 +193,7 @@ def test_ledger_records_wrapper_bytes():
     assert led.total_bytes() == 2 * 4 * 8 * 4
 
 
+@pytest.mark.dist
 def test_distributed_fft_traffic_lands_in_ledger():
     out = run_in_subprocess_devices("""
 import jax, jax.numpy as jnp

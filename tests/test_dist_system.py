@@ -1,8 +1,13 @@
 """Distribution-system tests (subprocess meshes): sharding invariance of
-the loss, dry-run cell machinery on a small mesh, collective accounting."""
+the loss, dry-run cell machinery on a small mesh, collective accounting,
+and the distributed four-step NTT's exactness + ledger parity."""
 import json
 
+import pytest
+
 from conftest import run_in_subprocess_devices
+
+pytestmark = pytest.mark.dist
 
 
 def test_loss_invariant_under_sharding():
@@ -64,6 +69,72 @@ res3 = run_cell("llama3-405b", "long_500k", mesh, verbose=False)
 assert res3["status"] == "skipped"
 print("OK")
 """, n_devices=8, timeout=900)
+    assert "OK" in out
+
+
+def test_distributed_ntt_exact_and_ledger_parity_8dev():
+    """Four-step NTT on an 8-virtual-device mesh: bit-exact (==) against
+    the local reference/kernel, roundtrip identity, Z-order polymul
+    cancellation, and the all-to-all byte ledger equal to the closed-form
+    ``four_step_collective_stats`` — the TPU-side counter-parity contract
+    (the CrossbarSim side lives in tests/test_pim_ntt.py)."""
+    out = run_in_subprocess_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.ntt import ref
+from repro.core.ntt import distributed as dntt
+from repro.dist import collectives
+
+mesh = jax.make_mesh((8,), ("data",))
+n, B, D = 1024, 4, 8
+params = ref.NTTParams.make(n)
+rng = np.random.default_rng(0)
+sh = NamedSharding(mesh, P(None, "data"))
+
+x = rng.integers(0, params.q, size=(B, n)).astype(np.uint32)
+xj = jax.device_put(jnp.asarray(x), sh)
+y = np.asarray(jax.jit(dntt.make_sharded_ntt(mesh, params))(xj))
+assert (y == ref.ntt(x, params).astype(np.uint32)).all(), "fwd != reference"
+
+back = np.asarray(jax.jit(dntt.make_sharded_ntt(mesh, params, inverse=True))(
+    jax.device_put(jnp.asarray(y), sh)))
+assert (back == x).all(), "roundtrip != identity"
+
+a = rng.integers(0, params.q, size=(B, n)).astype(np.uint32)
+b = rng.integers(0, params.q, size=(B, n)).astype(np.uint32)
+for nega in (True, False):
+    c = np.asarray(jax.jit(dntt.make_sharded_ntt_polymul(
+        mesh, params, negacyclic=nega))(
+        jax.device_put(jnp.asarray(a), sh), jax.device_put(jnp.asarray(b), sh)))
+    want = (ref.negacyclic_polymul if nega else ref.cyclic_polymul)(a, b, params)
+    assert (c == want.astype(np.uint32)).all(), f"polymul nega={nega}"
+
+# Also == the LOCAL Pallas kernel (not just the numpy reference).
+from repro.kernels.ntt import ntt_polymul
+local = np.asarray(ntt_polymul(jnp.asarray(a), jnp.asarray(b), params))
+dist = np.asarray(jax.jit(dntt.make_sharded_ntt_polymul(mesh, params))(
+    jax.device_put(jnp.asarray(a), sh), jax.device_put(jnp.asarray(b), sh)))
+assert (dist == local).all(), "distributed != local kernel"
+
+# Ledger parity: counts and bytes match the closed form per traced call.
+spec = jax.ShapeDtypeStruct((B, n), jnp.uint32)
+for op, build in (
+        ("ntt", lambda: dntt.make_sharded_ntt(mesh, params)),
+        ("intt", lambda: dntt.make_sharded_ntt(mesh, params, inverse=True)),
+        ("polymul", lambda: dntt.make_sharded_ntt_polymul(mesh, params))):
+    with collectives.ledger() as led:
+        nargs = 2 if op == "polymul" else 1
+        jax.jit(build()).lower(*([spec] * nargs))
+    want = dntt.four_step_collective_stats(n, B, D, op=op)
+    assert led.counts["all-to-all"] == want["count"], (op, led.as_dict())
+    assert led.bytes_by_kind["all-to-all"] == want["bytes"], (op, led.as_dict())
+
+# Z-order saves 1 of 3 transposes per transform: 6 for polymul, not 9.
+pm = dntt.four_step_collective_stats(n, B, D, op="polymul")
+fwd = dntt.four_step_collective_stats(n, B, D, op="ntt", ordered=True)
+assert pm["count"] == 6 < 3 * fwd["count"]
+print("OK")
+""", n_devices=8)
     assert "OK" in out
 
 

@@ -3,6 +3,8 @@ import pytest
 
 from conftest import run_in_subprocess_devices
 
+pytestmark = pytest.mark.dist
+
 
 def test_four_step_fft_and_polymul_8dev():
     out = run_in_subprocess_devices("""

@@ -137,6 +137,7 @@ def test_checkpoint_retention_and_atomicity(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) == 6
 
 
+@pytest.mark.dist
 def test_checkpoint_elastic_reshard_subprocess(tmp_path):
     """Save under an 8-device mesh sharding, restore under 4 devices."""
     from conftest import run_in_subprocess_devices
@@ -184,6 +185,7 @@ def test_watchdog_flags_stragglers_and_evicts():
 # Gradient compression (error feedback)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.dist
 def test_compressed_psum_error_feedback_subprocess():
     from conftest import run_in_subprocess_devices
     out = run_in_subprocess_devices("""
@@ -211,6 +213,59 @@ assert rel < 0.05, rel
 # error feedback: residual equals what quantization dropped
 assert np.max(np.abs(np.asarray(err))) < np.max(np.abs(np.asarray(g))) / 64
 print("OK")
+""", n_devices=4)
+    assert "OK" in out
+
+
+@pytest.mark.dist
+def test_train_step_compressed_psum_pod_mesh_subprocess():
+    """The ROADMAP wiring: ``make_train_step(pod_axis=...)`` runs the full
+    LM step inside shard_map over a 4-pod mesh, reducing gradients through
+    ``dist.collectives.compressed_psum``. Loss decreases, the error-feedback
+    residual is carried (nonzero after a step), and metrics come back
+    pod-averaged."""
+    from conftest import run_in_subprocess_devices
+    out = run_in_subprocess_devices("""
+import dataclasses, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.configs.registry import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.dist import collectives
+from repro.dist.compat import shard_map
+from repro.models import lm
+from repro.optim import adamw
+from repro.train import step as step_lib
+
+mesh = jax.make_mesh((4,), ("pod",))
+cfg = dataclasses.replace(get_config("qwen3-1.7b").scaled_down(),
+                          max_seq_len=32)
+opt_cfg = adamw.OptConfig(lr=3e-3, warmup_steps=0, total_steps=20)
+params = lm.init_params(cfg, jax.random.key(0))
+opt_state = adamw.init_state(params, opt_cfg)
+errs = collectives.zeros_like_errs(params)
+step = step_lib.make_train_step(cfg, opt_cfg, pod_axis="pod")
+fn = jax.jit(shard_map(step, mesh=mesh,
+                       in_specs=(P(), P(), P(), P("pod")),
+                       out_specs=(P(), P(), P(), P()), check_vma=False))
+data = SyntheticLM(cfg.vocab_size, 32, 8, seed=0)
+batch0 = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+# the compression wire format actually goes over the pod axis: one
+# compressed-psum record per gradient leaf (ledger records at trace time,
+# so probe BEFORE the jit cache is warm).
+with collectives.ledger() as led:
+    fn.lower(params, opt_state, errs,
+             {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in batch0.items()})
+assert led.counts["compressed-psum"] == len(jax.tree.leaves(params))
+losses = []
+for s in range(8):
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+    params, opt_state, errs, metrics = fn(params, opt_state, errs, batch)
+    losses.append(float(metrics["loss"]))
+assert min(losses[3:]) < losses[0] - 0.3, losses
+err_max = max(float(jnp.max(jnp.abs(e))) for e in jax.tree.leaves(errs))
+assert err_max > 0, "error-feedback residual must be carried"
+print("OK", round(losses[0], 3), "->", round(min(losses), 3))
 """, n_devices=4)
     assert "OK" in out
 
