@@ -2,17 +2,19 @@
 
 Public surface:
   fft / ifft / polymul / realpack_fft / fft_causal_conv   (kernels.ops)
+  rfft / irfft / polymul_real                             (real fast path)
   fft_distributed / make_sharded_fft / make_sharded_polymul (four-step)
   plan / FFTPlan                                           (planner)
 """
-from repro.kernels.ops import (fft, fft_causal_conv, ifft, polymul,
-                               realpack_fft)
+from repro.kernels.ops import (fft, fft_causal_conv, ifft, irfft, polymul,
+                               polymul_real, realpack_fft, rfft)
 from repro.core.fft.distributed import (fft_distributed, make_sharded_fft,
                                         make_sharded_polymul)
 from repro.core.fft.planner import FFTPlan, plan
 
 __all__ = [
-    "fft", "ifft", "polymul", "realpack_fft", "fft_causal_conv",
+    "fft", "ifft", "rfft", "irfft", "polymul", "polymul_real",
+    "realpack_fft", "fft_causal_conv",
     "fft_distributed", "make_sharded_fft", "make_sharded_polymul",
     "FFTPlan", "plan",
 ]

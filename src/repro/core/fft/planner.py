@@ -29,9 +29,20 @@ class FFTPlan:
     #: FFT — required for crypto polymul where results must be bit-exact
     #: mod q (docs/ntt.md).
     exact: bool = False
+    #: real-Hermitian route: two-for-one packed rfft/irfft kernels and the
+    #: paired-inverse real polymul (kernels.fft.rfft_planes /
+    #: kernels.polymul.polymul_real_planes) — half the butterflies and HBM
+    #: traffic of the complex tier on real input, with the doubled batch
+    #: block the halved working set buys (docs/fourier.md).
+    real: bool = False
 
     def describe(self) -> str:
-        kind = "NTT (exact mod-q)" if self.exact else "FFT"
+        if self.exact:
+            kind = "NTT (exact mod-q)"
+        elif self.real:
+            kind = "real-packed FFT (two-for-one Hermitian)"
+        else:
+            kind = "FFT"
         if self.tier == "local":
             return (f"local Pallas {kind} kernel, radix-{self.radix}, "
                     f"batch block {self.block_b} (VMEM-resident)")
@@ -44,10 +55,17 @@ _MAX_LOCAL_N = VMEM_BUDGET_BYTES // (2 * 4 * 4)   # = 256K points
 # Exact tier: one uint32 residue plane, ~4 live copies in the fused polymul
 # (operands + transforms) — twice the float threshold per byte of VMEM.
 _MAX_LOCAL_N_EXACT = VMEM_BUDGET_BYTES // (4 * 4)  # = 512K points
+# Real tier: one fp32 plane per point PER SEQUENCE, but the minimum
+# schedulable unit is a PAIR of rows packed into one full complex row
+# (the kernels require even blocks), so the longest local sequence matches
+# the complex tier — the packing doubles the batch block, not the ceiling.
+# (Unlike the exact tier, whose single-uint32-plane rows schedule at
+# blk=1 and genuinely halve the per-point footprint.)
+_MAX_LOCAL_N_REAL = _MAX_LOCAL_N                   # = 256K points
 
 
 def plan(n: int, batch: int, *, model_shards: int = 1,
-         exact: bool = False) -> FFTPlan:
+         exact: bool = False, real: bool = False) -> FFTPlan:
     """Execution plan for a batch of n-point transforms.
 
     ``exact=True`` routes to the modular-NTT tier (uint32 residues, radix-2
@@ -57,6 +75,13 @@ def plan(n: int, batch: int, *, model_shards: int = 1,
     (``core.ntt.distributed``) with per-shard roots
     (``NTTParams.subparams``) and ledger-accounted all-to-alls — the plan
     comes back with ``seq_shards > 1`` and ``exact=True``.
+    ``real=True`` routes real-coefficient workloads (the paper's polymul
+    serving case) to the two-for-one packed tier: the rfft/irfft kernels and
+    the paired-inverse ``polymul_real`` with the DOUBLED batch block
+    (``plan_batch_block(n, real=True)``) the halved per-row footprint buys.
+    The local-n ceiling matches the complex tier (the minimum block is a
+    row pair = one full complex row). Mutually exclusive with ``exact``
+    (residues are not packed).
     Raises ValueError on non-power-of-two n so misuse fails loudly instead
     of silently mis-planning (asserts vanish under ``python -O``).
     """
@@ -64,6 +89,9 @@ def plan(n: int, batch: int, *, model_shards: int = 1,
         raise ValueError(f"n={n} must be a power of two")
     if batch < 0:
         raise ValueError(f"batch={batch} must be non-negative")
+    if exact and real:
+        raise ValueError("exact (mod-q) and real (Hermitian) tiers are "
+                         "mutually exclusive")
     if exact:
         if n <= _MAX_LOCAL_N_EXACT or model_shards == 1:
             return FFTPlan(tier="local", radix=2,
@@ -72,6 +100,16 @@ def plan(n: int, batch: int, *, model_shards: int = 1,
         return FFTPlan(tier="distributed", radix=2, block_b=1,
                        seq_shards=model_shards, exact=True)
     radix = 4 if (n.bit_length() - 1) >= 2 else 2
+    if real:
+        if n <= _MAX_LOCAL_N_REAL or model_shards == 1:
+            return FFTPlan(tier="local", radix=radix,
+                           block_b=plan_batch_block(n, real=True),
+                           seq_shards=1, real=True)
+        # Distributed real tier: the four-step path runs the packed complex
+        # transform on z = a + i b per row pair; the Hermitian split stays a
+        # local post-pass (docs/fourier.md §distributed).
+        return FFTPlan(tier="distributed", radix=radix, block_b=1,
+                       seq_shards=model_shards, real=True)
     if n <= _MAX_LOCAL_N or model_shards == 1:
         return FFTPlan(tier="local", radix=radix,
                        block_b=plan_batch_block(n), seq_shards=1)

@@ -11,13 +11,19 @@ from repro.core.pim.device_model import (A100, FOURIERPIM_8, FOURIERPIM_40,
                                          FULL_COMPLEX_BITS,
                                          HALF_COMPLEX_BITS, GPUConfig,
                                          PIMConfig, RTX3070, with_partitions)
-from repro.core.pim.fft_pim import (PIMFFTResult, fft_2r, fft_2rbeta,
-                                    fft_energy_j_per_op, fft_latency_cycles,
-                                    fft_throughput_per_s, pim_fft, r_fft)
+from repro.core.pim.fft_pim import (PIMFFTResult, PIMRFFTResult, fft_2r,
+                                    fft_2rbeta, fft_energy_j_per_op,
+                                    fft_latency_cycles,
+                                    fft_throughput_per_s, pim_fft, pim_rfft,
+                                    r_fft, realpack_unpack_cycles,
+                                    rfft_latency_cycles,
+                                    rfft_throughput_per_s)
 from repro.core.pim.polymul_pim import (PIMPolymulResult, pim_polymul,
                                         pim_polymul_real,
                                         polymul_energy_j_per_op,
                                         polymul_latency_cycles,
+                                        polymul_real_batch_latency_cycles,
+                                        polymul_real_pair_latency_cycles,
                                         polymul_throughput_per_s)
 from repro.core.pim.ntt_pim import (PIMDistNTTResult, PIMNTTResult,
                                     PIMRNSResult, batched_ntt_stats,
@@ -40,10 +46,13 @@ __all__ = [
     "mod_mul_cycles", "ntt_butterfly_cycles", "op_cycles", "Counters",
     "CrossbarSim", "A100", "FOURIERPIM_8", "FOURIERPIM_40",
     "FULL_COMPLEX_BITS", "HALF_COMPLEX_BITS", "GPUConfig", "PIMConfig",
-    "RTX3070", "with_partitions", "PIMFFTResult", "fft_2r", "fft_2rbeta",
-    "fft_energy_j_per_op", "fft_latency_cycles", "fft_throughput_per_s",
-    "pim_fft", "r_fft", "PIMPolymulResult", "pim_polymul",
+    "RTX3070", "with_partitions", "PIMFFTResult", "PIMRFFTResult", "fft_2r",
+    "fft_2rbeta", "fft_energy_j_per_op", "fft_latency_cycles",
+    "fft_throughput_per_s", "pim_fft", "pim_rfft", "r_fft",
+    "realpack_unpack_cycles", "rfft_latency_cycles", "rfft_throughput_per_s",
+    "PIMPolymulResult", "pim_polymul",
     "pim_polymul_real", "polymul_energy_j_per_op", "polymul_latency_cycles",
+    "polymul_real_batch_latency_cycles", "polymul_real_pair_latency_cycles",
     "polymul_throughput_per_s", "PIMDistNTTResult", "PIMNTTResult",
     "PIMRNSResult", "batched_ntt_stats", "ntt_2r", "ntt_2rbeta",
     "ntt_distributed_a2a_bytes", "ntt_distributed_latency_cycles",

@@ -200,6 +200,90 @@ def pim_fft(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
 
 
 # ---------------------------------------------------------------------------
+# Real-input path (paper Eq. (10)): two real sequences per complex FFT.
+# ---------------------------------------------------------------------------
+
+def realpack_unpack_cycles(cfg: PIMConfig, spec: aritpim.FloatSpec) -> int:
+    """Eq. (10) Hermitian unpack, per serial unit: order reversal + conj +
+    2 complex adds + multiply-by-i + exponent decrements, charged with the
+    paper's §5 in-memory trick costs (conjugate = imag sign-bit flip,
+    multiply by i = half-word swap + sign flip, /2 = exponent decrement).
+    THE single definition — ``pim_rfft`` and the real polymul paths in
+    ``polymul_pim`` all charge it from here."""
+    word = aritpim.complex_word_bits(spec)
+    cycles = 0
+    cycles += (cfg.crossbar_rows // 2) * 6        # order reversal (row swaps)
+    cycles += 2                                   # conjugate: sign-bit NOT
+    cycles += 2 * aritpim.complex_add_cycles(spec)  # (Zrev* +- Z)
+    cycles += aritpim.swap_cycles(word // 2) + 2  # multiply by i
+    cycles += 2 * 2                               # /2: exponent decrements
+    return cycles
+
+
+def _hermitian_split(zf: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Numerical Eq. (10) split of Z = FFT(x + i y) into (X, Y)."""
+    zrev = np.roll(zf[::-1], 1)
+    return 0.5 * (np.conj(zrev) + zf), 0.5j * (np.conj(zrev) - zf)
+
+
+@dataclasses.dataclass(frozen=True)
+class PIMRFFTResult:
+    #: (2, n//2 + 1) complex half-spectra of the two packed real sequences
+    spectra: np.ndarray
+    counters: Counters
+
+
+def pim_rfft(x: np.ndarray, y: np.ndarray, cfg: PIMConfig,
+             spec: aritpim.FloatSpec, *, charge_perm: bool = True
+             ) -> PIMRFFTResult:
+    """Half-spectra of TWO real sequences via ONE packed complex FFT.
+
+    The crossbar holds z = x + i y (the imag plane stores the second
+    sequence instead of zeros — area per transform halves, so the batched
+    throughput doubles on top of the shared butterflies). The Hermitian
+    unpack runs in-memory with the §5 tricks; only n/2+1 bins per sequence
+    are kept. Counter parity with ``rfft_latency_cycles`` is pinned in
+    tests/test_pim.py.
+    """
+    n = len(x)
+    assert len(y) == n
+    beta = max(1, n // (2 * cfg.crossbar_rows))
+    serial = math.ceil(beta / cfg.partitions)
+    z = np.asarray(x, np.float64) + 1j * np.asarray(y, np.float64)
+    fz = pim_fft(z, cfg, spec, charge_perm=charge_perm)
+    sim = CrossbarSim(cfg, spec)
+    unpack = realpack_unpack_cycles(cfg, spec)
+    sim.ctr.cycles += unpack * serial
+    sim.ctr.gates += unpack * serial * cfg.crossbar_rows
+    fa, fb = _hermitian_split(fz.output)
+    half = n // 2 + 1
+    spectra = np.stack([fa[:half], fb[:half]])
+    ctr = Counters(cycles=fz.counters.cycles + sim.ctr.cycles,
+                   gates=fz.counters.gates + sim.ctr.gates)
+    return PIMRFFTResult(spectra=spectra, counters=ctr)
+
+
+def rfft_latency_cycles(n: int, cfg: PIMConfig, spec: aritpim.FloatSpec,
+                        *, charge_perm: bool = True) -> int:
+    """Closed form for ``pim_rfft`` (two sequences per run): one complex
+    transform plus the Hermitian unpack, serialized over the beta units."""
+    beta = max(1, n // (2 * cfg.crossbar_rows))
+    serial = math.ceil(beta / cfg.partitions)
+    return (fft_latency_cycles(n, cfg, spec, charge_perm=charge_perm)
+            + realpack_unpack_cycles(cfg, spec) * serial)
+
+
+def rfft_throughput_per_s(n: int, cfg: PIMConfig, spec: aritpim.FloatSpec
+                          ) -> float:
+    """Real-sequence transforms per second: each schedule slot carries TWO
+    sequences in one packed complex word — the ~2x the paper's real-polymul
+    ratios build on, verified against ``fft_throughput_per_s`` in tests."""
+    lat = rfft_latency_cycles(n, cfg, spec) / cfg.clock_hz
+    word = aritpim.complex_word_bits(spec)
+    return 2 * cfg.batch_capacity(n, word) * cfg.concurrency / lat
+
+
+# ---------------------------------------------------------------------------
 # Closed forms (benchmarks at scale; asserted == simulator in tests)
 # ---------------------------------------------------------------------------
 

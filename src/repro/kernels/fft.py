@@ -162,12 +162,204 @@ VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # conservative half of v5e's 16 MB VMEM
 _LIVE_FACTOR = 4  # in+out planes plus stage temporaries, empirically safe
 
 
-def plan_batch_block(n: int, max_block: int = 1024) -> int:
-    """Largest power-of-two batch block whose fp32 working set fits VMEM."""
-    per_row = 2 * n * 4 * _LIVE_FACTOR  # two planes, fp32, live copies
+def plan_batch_block(n: int, max_block: int = 1024, *,
+                     real: bool = False) -> int:
+    """Largest power-of-two batch block whose fp32 working set fits VMEM.
+
+    ``real=True`` is the two-for-one packed mode (rfft/irfft/real polymul):
+    two real rows share one complex working row, so the per-row footprint
+    halves and both the VMEM-derived block and its cap double — the batch
+    block the halved working set buys (paper Eq. (10): area halves, batch
+    doubles).
+    """
+    planes = 1 if real else 2
+    per_row = planes * n * 4 * _LIVE_FACTOR  # fp32 planes, live copies
+    if real:
+        max_block *= 2
     blk = VMEM_BUDGET_BYTES // per_row
-    blk = max(1, min(max_block, blk))
+    blk = max(2 if real else 1, min(max_block, blk))
     return 1 << (blk.bit_length() - 1)
+
+
+def _fit_block(blk: int, batch: int, *, even: bool = False) -> int:
+    """Shrink a planned batch block to the actual batch (next power of two
+    >= batch) so small batches don't zero-pad to the full VMEM block — the
+    planned block is a CAP from the VMEM budget, not a minimum.
+    ``even=True`` keeps the two-for-one pairing invariant."""
+    cap = 1 << max(0, batch - 1).bit_length()
+    blk = min(blk, max(1, cap))
+    return max(2, blk) if even else blk
+
+
+# ---------------------------------------------------------------------------
+# Real-input fast path: two-for-one packed rfft / irfft (paper Eq. (10)).
+#
+# Two real rows ride ONE complex transform as z = a + i b; conjugate symmetry
+# recovers both spectra. For real input the spectrum is Hermitian, so only
+# n/2+1 bins carry information — stored in the packed-Nyquist layout
+# (n/2 complex bins, power-of-two lane widths):
+#
+#   P[0] = X[0].re + i * X[n/2].re     (DC and Nyquist are both real)
+#   P[k] = X[k]                        (1 <= k < n/2)
+#
+# The split/pack happens INSIDE the kernel: the half-spectrum never
+# round-trips HBM at full width, halving both butterfly work (half the
+# complex rows) and HBM traffic (half the output planes) vs. running the
+# complex kernel on zero-imag input.
+# ---------------------------------------------------------------------------
+
+def _roll1(x):
+    """roll(x, 1) along the last axis via concat (gather-free for Mosaic)."""
+    return jnp.concatenate([x[..., -1:], x[..., :-1]], axis=-1)
+
+
+def _reverse_mod_n(xr, xi):
+    """(Z_k) -> (Z_{n-k}), indices mod n: flip then rotate so k=0 stays."""
+    return _roll1(jnp.flip(xr, axis=-1)), _roll1(jnp.flip(xi, axis=-1))
+
+
+def hermitian_split(zr, zi):
+    """Split Z = FFT(a + i b) of two real rows into their spectra (Eq. (10)).
+
+    A_k = (Z_k + conj(Z_{n-k})) / 2,  B_k = -i (Z_k - conj(Z_{n-k})) / 2.
+    The results are EXACTLY Hermitian in fp32 (each component of A_{n-k} is
+    the same float expression as ±A_k's), which is what lets the paired
+    inverse in kernels/polymul.py split two real products per transform.
+    """
+    zrr, zri = _reverse_mod_n(zr, zi)
+    ar = 0.5 * (zrr + zr)
+    ai = 0.5 * (-zri + zi)
+    br = 0.5 * (zri + zi)
+    bi = 0.5 * (zrr - zr)
+    return ar, ai, br, bi
+
+
+def _pack_half(sr, si, nh: int):
+    """Full Hermitian spectrum planes (B, n) -> packed-Nyquist (B, nh)."""
+    pr = sr[:, :nh]
+    pi = jnp.concatenate([sr[:, nh:nh + 1], si[:, 1:nh]], axis=1)
+    return pr, pi
+
+
+def _unpack_full(pr, pi, n: int):
+    """Packed-Nyquist half-spectrum (B, n/2) -> full Hermitian planes (B, n).
+
+    Mirror bins k in (n/2, n) are conj(P[n-k]); DC/Nyquist imag parts are
+    structurally zero. Concat/flip only — gather-free for Mosaic.
+    """
+    nh = n // 2
+    zero = jnp.zeros_like(pr[:, :1])
+    head_i = jnp.concatenate([zero, pi[:, 1:]], axis=1)        # im, bins < n/2
+    tail_r = jnp.flip(pr[:, 1:], axis=1)                       # re, bins > n/2
+    tail_i = -jnp.flip(pi[:, 1:], axis=1)
+    fr = jnp.concatenate([pr, pi[:, :1], tail_r], axis=1)      # Nyquist at n/2
+    fi = jnp.concatenate([head_i, zero, tail_i], axis=1)
+    return fr, fi
+
+
+def _rfft_kernel(wr_ref, wi_ref, x_ref, or_ref, oi_ref, *, n: int, radix: int):
+    blk = x_ref.shape[0]
+    nh = n // 2
+    x = x_ref[...].astype(jnp.float32).reshape(blk // 2, 2, n)
+    zr, zi = stockham_stages(x[:, 0, :], x[:, 1, :], wr_ref[...], wi_ref[...],
+                             n=n, inverse=False, radix=radix)
+    ar, ai, br, bi = hermitian_split(zr, zi)
+    par, pai = _pack_half(ar, ai, nh)
+    pbr, pbi = _pack_half(br, bi, nh)
+    or_ref[...] = jnp.stack([par, pbr], axis=1).reshape(blk, nh).astype(
+        or_ref.dtype)
+    oi_ref[...] = jnp.stack([pai, pbi], axis=1).reshape(blk, nh).astype(
+        oi_ref.dtype)
+
+
+def _irfft_kernel(wr_ref, wi_ref, xr_ref, xi_ref, o_ref, *, n: int,
+                  radix: int):
+    blk = xr_ref.shape[0]
+    nh = n // 2
+    xr = xr_ref[...].astype(jnp.float32).reshape(blk // 2, 2, nh)
+    xi = xi_ref[...].astype(jnp.float32).reshape(blk // 2, 2, nh)
+    ar, ai = _unpack_full(xr[:, 0], xi[:, 0], n)
+    br, bi = _unpack_full(xr[:, 1], xi[:, 1], n)
+    # Linearity: IFFT(A + i B) = a + i b for real rows a, b.
+    yr, yi = stockham_stages(ar - bi, ai + br, wr_ref[...], wi_ref[...],
+                             n=n, inverse=True, radix=radix)
+    o_ref[...] = jnp.stack([yr, yi], axis=1).reshape(blk, n).astype(
+        o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("radix", "interpret", "block_b"))
+def rfft_planes(x: jax.Array, *, radix: int = 2, interpret: bool = True,
+                block_b: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """Packed half-spectrum FFT of real rows: (B, n) -> planes (B, n//2).
+
+    Grid/tiling contract matches ``fft_planes`` with the real-mode batch
+    block (doubled: half the working set per row). The batch is zero-padded
+    to the (even) block, so odd batches are fine.
+    """
+    assert x.ndim == 2, f"expected (batch, n), got {x.shape}"
+    b, n = x.shape
+    assert n >= 2 and n & (n - 1) == 0, f"n={n} must be a power of two >= 2"
+    blk = block_b or _fit_block(plan_batch_block(n, real=True), b, even=True)
+    assert blk % 2 == 0, f"two-for-one packing needs an even block, got {blk}"
+    pad = (-b) % blk
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    bp = x.shape[0]
+    nh = n // 2
+    wr_np, wi_np = twiddle_table(n)
+    kern = functools.partial(_rfft_kernel, n=n, radix=radix)
+    wspec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    yr, yi = pl.pallas_call(
+        kern,
+        grid=(bp // blk,),
+        in_specs=[wspec, wspec,
+                  pl.BlockSpec((blk, n), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((blk, nh), lambda i: (i, 0)),
+                   pl.BlockSpec((blk, nh), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((bp, nh), x.dtype),
+                   jax.ShapeDtypeStruct((bp, nh), x.dtype)],
+        interpret=interpret,
+    )(jnp.asarray(wr_np), jnp.asarray(wi_np), x)
+    if pad:
+        yr, yi = yr[:b], yi[:b]
+    return yr, yi
+
+
+@functools.partial(jax.jit, static_argnames=("radix", "interpret", "block_b"))
+def irfft_planes(xr: jax.Array, xi: jax.Array, *, radix: int = 2,
+                 interpret: bool = True,
+                 block_b: int | None = None) -> jax.Array:
+    """Inverse of ``rfft_planes``: packed planes (B, n//2) -> real (B, n).
+
+    Two packed half-spectra are re-mirrored to full Hermitian spectra inside
+    the kernel and ride ONE inverse complex transform (Z = A + i B), so the
+    butterfly count matches the forward path.
+    """
+    assert xr.shape == xi.shape and xr.ndim == 2, (xr.shape, xi.shape)
+    b, nh = xr.shape
+    n = 2 * nh
+    assert n & (n - 1) == 0, f"n={n} must be a power of two"
+    blk = block_b or _fit_block(plan_batch_block(n, real=True), b, even=True)
+    assert blk % 2 == 0, f"two-for-one packing needs an even block, got {blk}"
+    pad = (-b) % blk
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+        xi = jnp.pad(xi, ((0, pad), (0, 0)))
+    bp = xr.shape[0]
+    wr_np, wi_np = twiddle_table(n, inverse=True)
+    kern = functools.partial(_irfft_kernel, n=n, radix=radix)
+    wspec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    y = pl.pallas_call(
+        kern,
+        grid=(bp // blk,),
+        in_specs=[wspec, wspec,
+                  pl.BlockSpec((blk, nh), lambda i: (i, 0)),
+                  pl.BlockSpec((blk, nh), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((blk, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, n), xr.dtype),
+        interpret=interpret,
+    )(jnp.asarray(wr_np), jnp.asarray(wi_np), xr, xi)
+    return y[:b] if pad else y
 
 
 @functools.partial(jax.jit, static_argnames=("inverse", "radix", "interpret", "block_b"))
@@ -181,7 +373,7 @@ def fft_planes(xr: jax.Array, xi: jax.Array, *, inverse: bool = False,
     """
     assert xr.shape == xi.shape and xr.ndim == 2
     b, n = xr.shape
-    blk = block_b or plan_batch_block(n)
+    blk = block_b or _fit_block(plan_batch_block(n), b)
     pad = (-b) % blk
     if pad:
         xr = jnp.pad(xr, ((0, pad), (0, 0)))

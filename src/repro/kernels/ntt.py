@@ -140,17 +140,27 @@ def _ntt_kernel(w_ref, x_ref, o_ref, *, n: int, q: int, qinv: int,
 
 
 def _rns_ntt_polymul_kernel(scal_ref, wf_ref, wi_ref, twist_ref, untwist_ref,
-                            a_ref, b_ref, c_ref, *, n: int, negacyclic: bool):
+                            a_ref, b_ref, c_ref, *, n: int, negacyclic: bool,
+                            prefetch: bool):
     """One grid cell = one (limb, batch-block) tile of the RNS polymul.
 
     Identical dataflow to ``_ntt_polymul_kernel``; the limb's modulus
     constants are *data* (scal_ref row: q, qinv, r2) instead of closure
     constants, which is what lets k different-q transforms share a single
     pallas launch on the (limb, batch) grid.
+
+    ``prefetch=True`` is the scalar-prefetch layout
+    (``pltpu.PrefetchScalarGridSpec``): ``scal_ref`` is the WHOLE (k, 4)
+    table resident in SMEM before the body runs — the per-limb constants
+    never occupy a VMEM block and are available for the twiddle DMAs.
+    ``prefetch=False`` is the scalar-Ref fallback (a (1, 4) VMEM block per
+    grid cell), kept for backends/modes without SMEM prefetch. Both paths
+    are pinned bit-exactly equal in tests/test_rns_ntt.py.
     """
-    q = scal_ref[0, 0]
-    qinv = scal_ref[0, 1]
-    r2 = scal_ref[0, 2]
+    row = pl.program_id(0) if prefetch else 0
+    q = scal_ref[row, 0]
+    qinv = scal_ref[row, 1]
+    r2 = scal_ref[row, 2]
     wf = wf_ref[...]
     wi = wi_ref[...]
     a = a_ref[0]
@@ -337,10 +347,12 @@ def _rns_tables(rns, negacyclic: bool):
 
 
 @functools.partial(jax.jit, static_argnames=("rns", "negacyclic",
-                                             "interpret", "block_b"))
+                                             "interpret", "block_b",
+                                             "scalar_prefetch"))
 def rns_ntt_polymul(ar: jax.Array, br: jax.Array, rns, *,
                     negacyclic: bool = True, interpret: bool = True,
-                    block_b: int | None = None) -> jax.Array:
+                    block_b: int | None = None,
+                    scalar_prefetch: bool | None = None) -> jax.Array:
     """Limb-batched exact polymul: residue stacks (k, B, n) -> (k, B, n).
 
     ``rns`` is a ``core.ntt.rns.RNSParams`` (kept opaque here so the kernel
@@ -350,6 +362,12 @@ def rns_ntt_polymul(ar: jax.Array, br: jax.Array, rns, *,
     ``plan_batch_block`` grid the batched single-modulus kernels use, so an
     8-limb 100-bit-Q product costs one kernel dispatch, not eight.
     CRT reconstruction (``rns.crt_to_modulus``) lives with the caller.
+
+    ``scalar_prefetch`` hoists the per-limb q/qinv/r2 table to TPU scalar
+    prefetch (SMEM, ``PrefetchScalarGridSpec``) instead of streaming it as
+    a (1, 4) VMEM block per grid cell. Default: enabled exactly when the
+    kernel compiles for real hardware (``not interpret``); pass explicitly
+    to pin either layout (tests force both and assert bit-equality).
     """
     ar = jnp.asarray(ar)
     br = jnp.asarray(br)
@@ -366,17 +384,35 @@ def rns_ntt_polymul(ar: jax.Array, br: jax.Array, rns, *,
     bp = ar.shape[1]
     scal, wf, wi, twist, untwist = (jnp.asarray(t) for t in
                                     _rns_tables(rns, negacyclic))
+    prefetch = (not interpret) if scalar_prefetch is None else scalar_prefetch
     kern = functools.partial(_rns_ntt_polymul_kernel, n=n,
-                             negacyclic=negacyclic)
-    sspec = pl.BlockSpec((1, 4), lambda l, i: (l, 0))
-    wspec = pl.BlockSpec((1, n), lambda l, i: (l, 0))
-    bspec = pl.BlockSpec((1, blk, n), lambda l, i: (l, i, 0))
-    c = pl.pallas_call(
-        kern,
-        grid=(k, bp // blk),
-        in_specs=[sspec, wspec, wspec, wspec, wspec, bspec, bspec],
-        out_specs=bspec,
-        out_shape=jax.ShapeDtypeStruct((k, bp, n), jnp.uint32),
-        interpret=interpret,
-    )(scal, wf, wi, twist, untwist, ar, br)
+                             negacyclic=negacyclic, prefetch=prefetch)
+    out_shape = jax.ShapeDtypeStruct((k, bp, n), jnp.uint32)
+    if prefetch:
+        from jax.experimental.pallas import tpu as pltpu
+        # index maps gain the prefetched scal Ref as a trailing argument.
+        wspec = pl.BlockSpec((1, n), lambda l, i, s: (l, 0))
+        bspec = pl.BlockSpec((1, blk, n), lambda l, i, s: (l, i, 0))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(k, bp // blk),
+            in_specs=[wspec, wspec, wspec, wspec, bspec, bspec],
+            out_specs=bspec,
+        )
+        c = pl.pallas_call(
+            kern, grid_spec=grid_spec, out_shape=out_shape,
+            interpret=interpret,
+        )(scal, wf, wi, twist, untwist, ar, br)
+    else:
+        sspec = pl.BlockSpec((1, 4), lambda l, i: (l, 0))
+        wspec = pl.BlockSpec((1, n), lambda l, i: (l, 0))
+        bspec = pl.BlockSpec((1, blk, n), lambda l, i: (l, i, 0))
+        c = pl.pallas_call(
+            kern,
+            grid=(k, bp // blk),
+            in_specs=[sspec, wspec, wspec, wspec, wspec, bspec, bspec],
+            out_specs=bspec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(scal, wf, wi, twist, untwist, ar, br)
     return c[:, :bsz] if pad else c

@@ -20,6 +20,13 @@ Example:
   # multi-limb RNS route for FHE-scale moduli (limb count from the bits):
   PYTHONPATH=src python -m repro.launch.serve --service fft --n 1024 \
       --batch 8 --requests 16 --op polymul-mod --modulus-bits 120
+  # distributed exact tier (four-step NTT over 8 sequence shards):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --service fft --n 1024 --batch 4 \
+      --requests 16 --op polymul-mod --model-shards 8
+  # real-signal half-spectrum transforms (two-for-one packed kernel):
+  PYTHONPATH=src python -m repro.launch.serve --service fft --n 1024 \
+      --batch 64 --requests 256 --op rfft
   PYTHONPATH=src python -m repro.launch.serve --service lm \
       --arch qwen3-1.7b --smoke --prompt-len 32 --gen 32
 """
@@ -47,30 +54,75 @@ from repro.models import lm
 class FFTService:
     """Batched transform service with a request queue and a worker loop.
 
+    ``op='polymul-real'`` is the paper's headline serving workload —
+    real-coefficient products — routed through the real-Hermitian fast path
+    (``fft_core.polymul_real``: two-for-one packed forward, paired
+    inverse); ``self.plan`` records the planner's real-tier selection so
+    tests can assert the route, not just the values. ``op='rfft'`` serves
+    half-spectrum transforms of real signals the same way.
+
+    ``op='polymul'`` is the complex endpoint (payloads are cast to
+    complex64 — real requests belong on ``polymul-real``).
+
     ``op='polymul-mod'`` is the exact modular endpoint (paper §5's crypto
     motivation): negacyclic products mod (x^n + 1, q) through the fused
     NTT kernel — bit-exact, so results can feed an RLWE/FHE pipeline.
+    With ``model_shards > 1`` it dispatches the distributed four-step NTT
+    (``core.ntt.distributed``) over a ``data`` mesh axis of that many
+    devices — the serve endpoint for the planner's distributed exact tier.
     """
 
     def __init__(self, n: int, batch: int, op: str = "fft",
-                 modulus_bits: int | None = None):
+                 modulus_bits: int | None = None, model_shards: int = 1):
         self.n = n
         self.batch = batch
         self.op = op
         self.ntt_params = None
         self.rns = None
+        self.mesh = None
+        self.plan = None
+        self.route = op
         self.q: queue.Queue = queue.Queue()
         self.results: dict[int, np.ndarray] = {}
         self.done = threading.Event()
         if op == "fft":
+            self.plan = fft_core.plan(n, batch)
             self._fn = jax.jit(lambda x: fft_core.fft(x))
+        elif op == "rfft":
+            self.plan = fft_core.plan(n, batch, real=True)
+            self.route = "rfft-real"
+            self._fn = jax.jit(lambda x: fft_core.rfft(x))
         elif op == "polymul":
-            self._fn = jax.jit(
-                lambda a, b: fft_core.polymul(a, b, mode="circular"))
+            self.plan = fft_core.plan(n, batch)
+            self._fn = jax.jit(lambda a, b: fft_core.polymul(
+                a.astype(jnp.complex64), b.astype(jnp.complex64),
+                mode="circular"))
         elif op == "polymul-real":
-            self._fn = jax.jit(
-                lambda a, b: fft_core.polymul(a, b, mode="circular"))
+            self.plan = fft_core.plan(n, batch, real=True)
+            self.route = "polymul-real-packed"
+            self._fn = jax.jit(lambda a, b: fft_core.polymul_real(
+                a, b, mode="circular"))
+        elif op == "polymul-mod" and model_shards > 1:
+            if modulus_bits is not None and modulus_bits > 30:
+                raise ValueError("distributed polymul-mod is single-limb: "
+                                 "RNS (modulus_bits > 30) shards limbs, not "
+                                 "the sequence")
+            from repro.core.ntt import NTTParams
+            from repro.core.ntt import distributed as dntt
+            # An explicit --model-shards request pins the distributed tier
+            # even where the planner's policy would keep a short sequence
+            # local; record the plan actually executed.
+            self.plan = fft_core.FFTPlan(tier="distributed", radix=2,
+                                         block_b=1,
+                                         seq_shards=model_shards, exact=True)
+            self.route = "polymul-mod-distributed"
+            self.ntt_params = NTTParams.make(
+                n, bits=30 if modulus_bits is None else modulus_bits)
+            self.mesh = jax.make_mesh((model_shards,), ("data",))
+            self._fn = jax.jit(dntt.make_sharded_ntt_polymul(
+                self.mesh, self.ntt_params))
         elif op == "polymul-mod":
+            self.plan = fft_core.plan(n, batch, exact=True)
             # ``modulus_bits`` is the request-level knob: single-word q
             # (< 2^31) stays on the fused uint32 kernel; anything wider
             # routes through the RNS layer, which picks the limb count to
@@ -93,6 +145,30 @@ class FFTService:
         else:
             raise ValueError(op)
 
+    def warmup(self) -> None:
+        """Compile the batch function before serving (deploy-time warmup):
+        the reported throughput is steady-state, not trace+compile."""
+        n, batch = self.n, self.batch
+        if self.op == "fft":
+            jax.block_until_ready(self._fn(jnp.zeros((batch, n),
+                                                     jnp.complex64)))
+        elif self.op == "rfft":
+            jax.block_until_ready(self._fn(jnp.zeros((batch, n),
+                                                     jnp.float32)))
+        elif self.rns is not None:
+            z = np.zeros((batch, n), object)
+            z += 0   # python-int zeros, as the RNS route receives
+            self._fn(z, z)
+        elif self.op == "polymul-mod":
+            z = jnp.zeros((batch, n), jnp.uint32)
+            jax.block_until_ready(self._fn(z, z))
+        elif self.op == "polymul":
+            z = jnp.zeros((batch, n), jnp.complex64)   # the payload dtype
+            jax.block_until_ready(self._fn(z, z))
+        else:
+            z = jnp.zeros((batch, n), jnp.float32)
+            jax.block_until_ready(self._fn(z, z))
+
     def submit(self, req_id: int, payload):
         self.q.put((req_id, payload))
 
@@ -111,6 +187,7 @@ class FFTService:
         served = 0
         t0 = time.time()
         batches = 0
+        compute_s = 0.0
         while served < total_requests:
             items = self._collect()
             if not items:
@@ -120,8 +197,12 @@ class FFTService:
             # pad the tail batch
             while len(pay) < self.batch:
                 pay.append(pay[-1])
+            t_c = time.time()
             if self.op == "fft":
                 x = jnp.asarray(np.stack(pay)).astype(jnp.complex64)
+                out = np.asarray(self._fn(x))
+            elif self.op == "rfft":
+                x = jnp.asarray(np.stack(pay)).astype(jnp.float32)
                 out = np.asarray(self._fn(x))
             elif self.rns is not None:
                 # Big-Q coefficients are python ints (object dtype): the RNS
@@ -134,25 +215,44 @@ class FFTService:
                 a = jnp.asarray(np.stack([p[0] for p in pay]))
                 b = jnp.asarray(np.stack([p[1] for p in pay]))
                 out = np.asarray(self._fn(a, b))
+            compute_s += time.time() - t_c
             for j, rid in enumerate(ids):
                 self.results[rid] = out[j]
             served += len(ids)
             batches += 1
         dt = time.time() - t0
         return {"served": served, "batches": batches, "seconds": dt,
-                "throughput_per_s": served / dt}
+                "throughput_per_s": served / dt,
+                # compute-only rate: excludes queue collection waits, so
+                # endpoint comparisons reflect the kernels, not the driver
+                "compute_seconds": compute_s,
+                "compute_throughput_per_s": served / max(compute_s, 1e-9)}
 
 
 def run_fft_service(args) -> dict:
     rng = np.random.default_rng(0)
     svc = FFTService(args.n, args.batch, args.op,
-                     modulus_bits=args.modulus_bits)
+                     modulus_bits=args.modulus_bits,
+                     model_shards=args.model_shards)
+    svc.warmup()
 
     def producer():
         for rid in range(args.requests):
             if args.op == "fft":
                 payload = (rng.standard_normal(args.n)
                            + 1j * rng.standard_normal(args.n))
+            elif args.op == "rfft":
+                payload = rng.standard_normal(args.n).astype(np.float32)
+            elif args.op == "polymul":
+                # The complex endpoint gets genuinely complex payloads:
+                # zero-imag inputs would let XLA strip half the butterflies
+                # at compile time and misrepresent the endpoint's cost
+                # (real requests belong on polymul-real).
+                payload = (
+                    (rng.standard_normal(args.n)
+                     + 1j * rng.standard_normal(args.n)).astype(np.complex64),
+                    (rng.standard_normal(args.n)
+                     + 1j * rng.standard_normal(args.n)).astype(np.complex64))
             elif args.op == "polymul-mod" and svc.rns is not None:
                 from repro.core.ntt.rns import random_poly
                 payload = (random_poly(rng, args.n, svc.rns.modulus),
@@ -176,9 +276,12 @@ def run_fft_service(args) -> dict:
         pass  # payload not retained; correctness covered by kernel tests
     limbs = f" limbs={svc.rns.k} Q~2^{svc.rns.modulus.bit_length()}" \
         if svc.rns is not None else ""
-    print(f"[serve:fft] op={args.op}{limbs} n={args.n} batch={args.batch} "
-          f"served={stats['served']} in {stats['seconds']:.2f}s "
-          f"-> {stats['throughput_per_s']:.1f} req/s")
+    print(f"[serve:fft] op={args.op}{limbs} route={svc.route} n={args.n} "
+          f"batch={args.batch} served={stats['served']} in "
+          f"{stats['seconds']:.2f}s "
+          f"-> {stats['throughput_per_s']:.1f} req/s "
+          f"(compute-only {stats['compute_throughput_per_s']:.1f} req/s) "
+          f"[{svc.plan.describe()}]")
     return stats
 
 
@@ -220,12 +323,17 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--op", default="fft",
-                    choices=["fft", "polymul", "polymul-real",
+                    choices=["fft", "rfft", "polymul", "polymul-real",
                              "polymul-mod"])
     ap.add_argument("--modulus-bits", type=int, default=None,
                     help="polymul-mod target modulus width; > 30 routes "
                          "through the multi-limb RNS/CRT layer (limb count "
                          "chosen to cover Q, docs/ntt.md)")
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help="polymul-mod only: shard the sequence over this "
+                         "many devices via the distributed four-step NTT "
+                         "(core/ntt/distributed.py) — the serve endpoint "
+                         "for the planner's distributed exact tier")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=32)

@@ -138,6 +138,51 @@ print("OK")
     assert "OK" in out
 
 
+def test_serve_polymul_mod_distributed_8dev():
+    """Serve endpoint for the planner's distributed exact tier: ``--op
+    polymul-mod --model-shards 8`` dispatches ``core/ntt/distributed``
+    (instead of raising or silently falling back to the local kernel), the
+    route/plan record says so, and the served products are bit-exact (==)
+    against the local fused kernel AND the end-to-end driver completes."""
+    out = run_in_subprocess_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.launch import serve
+from repro.core.ntt.ref import negacyclic_polymul
+from repro.kernels.ntt import ntt_polymul
+
+# Route + exactness through the service object.
+svc = serve.FFTService(512, 2, "polymul-mod", model_shards=8)
+assert svc.route == "polymul-mod-distributed", svc.route
+assert svc.plan.tier == "distributed" and svc.plan.exact
+assert svc.plan.seq_shards == 8
+q = svc.ntt_params.q
+rng = np.random.default_rng(0)
+a = rng.integers(0, q, (2, 512)).astype(np.uint32)
+b = rng.integers(0, q, (2, 512)).astype(np.uint32)
+got = np.asarray(svc._fn(jnp.asarray(a), jnp.asarray(b)))
+assert (got == negacyclic_polymul(a, b, svc.ntt_params).astype(np.uint32)).all()
+local = np.asarray(ntt_polymul(jnp.asarray(a), jnp.asarray(b),
+                               svc.ntt_params))
+assert (got == local).all(), "distributed serve != local kernel"
+
+# RNS + sequence sharding is rejected loudly (limbs shard, not sequences).
+try:
+    serve.FFTService(512, 2, "polymul-mod", modulus_bits=100, model_shards=8)
+except ValueError:
+    pass
+else:
+    raise AssertionError("RNS + model_shards should raise")
+
+# End-to-end driver: queue -> batch -> distributed kernel -> results.
+stats = serve.main(["--service", "fft", "--n", "512", "--batch", "2",
+                    "--requests", "4", "--op", "polymul-mod",
+                    "--model-shards", "8"])
+assert stats["served"] == 4, stats
+print("OK")
+""", n_devices=8)
+    assert "OK" in out
+
+
 def test_collective_bytes_parser():
     from repro.launch.dryrun import collective_bytes
     hlo = """

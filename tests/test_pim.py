@@ -8,8 +8,12 @@ from hypothesis import given, settings, strategies as st
 from repro.core.pim import (A100, FOURIERPIM_8, FOURIERPIM_40, FP16, FP32,
                             RTX3070, complex_word_bits, fft_latency_cycles,
                             fft_throughput_per_s, gpu_model, pim_fft,
-                            pim_polymul, pim_polymul_real,
-                            polymul_latency_cycles, with_partitions)
+                            pim_polymul, pim_polymul_real, pim_rfft,
+                            polymul_latency_cycles,
+                            polymul_real_batch_latency_cycles,
+                            polymul_real_pair_latency_cycles,
+                            polymul_throughput_per_s, rfft_latency_cycles,
+                            rfft_throughput_per_s, with_partitions)
 from repro.core.pim import aritpim, fft_pim
 
 
@@ -85,6 +89,84 @@ def test_partition_area_restriction_footnote7():
     assert cfg2.crossbars_per_fft(8192, w) <= 1.0
     assert FOURIERPIM_8.valid_config(16384, w)
     assert not FOURIERPIM_8.valid_config(32768, w)  # future work: multi-xbar
+
+
+# ---------------------------------------------------------------------------
+# Real-Hermitian path: pim_rfft + the paired-inverse real polymul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [FP32, FP16])
+@pytest.mark.parametrize("n", [1024, 2048, 4096])
+def test_pim_rfft_values_and_counter_parity(rng, n, spec):
+    """Two real sequences via one packed complex FFT: half-spectra match
+    numpy, simulator counters == the closed form."""
+    x, y = rng.standard_normal(n), rng.standard_normal(n)
+    res = pim_rfft(x, y, FOURIERPIM_8, spec)
+    np.testing.assert_allclose(res.spectra[0], np.fft.rfft(x), rtol=1e-9,
+                               atol=1e-8)
+    np.testing.assert_allclose(res.spectra[1], np.fft.rfft(y), rtol=1e-9,
+                               atol=1e-8)
+    assert res.counters.cycles == rfft_latency_cycles(n, FOURIERPIM_8, spec)
+
+
+def test_pim_rfft_throughput_near_2x_fft():
+    """Each schedule slot carries two real sequences: throughput is ~2x the
+    complex FFT's (slightly under — the unpack pass is not free)."""
+    for n in (2048, 4096):
+        ratio = (rfft_throughput_per_s(n, FOURIERPIM_8, FP32)
+                 / fft_throughput_per_s(n, FOURIERPIM_8, FP32))
+        assert 1.9 < ratio < 2.0, ratio
+
+
+@pytest.mark.parametrize("batch", [2, 4, 5])
+def test_polymul_real_paired_counter_parity_and_values(rng, batch):
+    """(B, n) batches share one inverse per product pair: counters == the
+    batch closed form, values still match numpy per row (the Re/Im split of
+    the packed inverse is exact for Hermitian product spectra)."""
+    n = 2048
+    a = rng.standard_normal((batch, n))
+    b = rng.standard_normal((batch, n))
+    res = pim_polymul_real(a, b, FOURIERPIM_8, FP32)
+    assert res.counters.cycles == polymul_real_batch_latency_cycles(
+        n, batch, FOURIERPIM_8, FP32)
+    want = np.fft.ifft(np.fft.fft(a) * np.fft.fft(b)).real
+    np.testing.assert_allclose(res.output, want, rtol=1e-9, atol=1e-8)
+
+
+def test_polymul_real_pair_parity_direct(rng):
+    """The (2, n) pair IS the closed-form unit: sim counters == pair form,
+    and the pair is strictly cheaper than two unpaired products."""
+    n = 4096
+    a = rng.standard_normal((2, n))
+    b = rng.standard_normal((2, n))
+    res = pim_polymul_real(a, b, FOURIERPIM_8, FP32)
+    pair = polymul_real_pair_latency_cycles(n, FOURIERPIM_8, FP32)
+    assert res.counters.cycles == pair
+    assert pair < 2 * polymul_latency_cycles(n, FOURIERPIM_8, FP32,
+                                             real=True)
+
+
+@pytest.mark.parametrize("spec", [FP32, FP16])
+@pytest.mark.parametrize("n", [1024, 4096])
+def test_real_complex_cycle_ratio_gate(n, spec):
+    """THE acceptance gate (the same constant benchmarks/run.py --smoke /
+    BENCH_fourier.json enforces): per-product simulated cycles of the
+    paired real polymul <= 0.65x the complex fused polymul."""
+    from benchmarks.run import REAL_COMPLEX_CYCLE_GATE
+    pair = polymul_real_pair_latency_cycles(n, FOURIERPIM_8, spec)
+    cplx = polymul_latency_cycles(n, FOURIERPIM_8, spec)
+    ratio = pair / (2 * cplx)
+    assert ratio <= REAL_COMPLEX_CYCLE_GATE, (n, spec, ratio)
+
+
+def test_real_polymul_throughput_beats_complex():
+    """Amortized pair latency + halved operand area: the real path's
+    products/s must beat the complex path's by well over the paper's
+    per-transform ratio."""
+    for n in (2048, 8192):
+        r = polymul_throughput_per_s(n, FOURIERPIM_8, FP32, real=True)
+        c = polymul_throughput_per_s(n, FOURIERPIM_8, FP32)
+        assert r > 1.5 * c, (n, r / c)
 
 
 def test_real_polymul_cheaper_than_complex():

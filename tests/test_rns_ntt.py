@@ -170,6 +170,37 @@ def test_rns_kernel_single_limb_degenerates_to_ntt_polymul(rng):
     assert (via_rns == via_ntt).all()
 
 
+@pytest.mark.parametrize("negacyclic", [True, False])
+def test_rns_scalar_prefetch_bit_exact(rng, negacyclic):
+    """The scalar-prefetch layout (PrefetchScalarGridSpec, per-limb q/qinv/
+    r2 resident in SMEM before the body runs — the on-TPU default) is
+    bit-identical to the scalar-Ref fallback, and both still match the
+    big-int schoolbook oracle. Forced explicitly so interpret mode pins
+    BOTH layouts."""
+    from repro.kernels.ntt import rns_ntt_polymul
+    n, B = 64, 2
+    r = _rns(n, 100)
+    assert r.k > 1                        # multiple limbs exercise program_id
+    ar = np.stack([np.stack([rng.integers(0, p.q, n).astype(np.uint32)
+                             for p in r.limbs]) for _ in range(B)], axis=1)
+    br = np.stack([np.stack([rng.integers(0, p.q, n).astype(np.uint32)
+                             for p in r.limbs]) for _ in range(B)], axis=1)
+    fallback = np.asarray(rns_ntt_polymul(
+        jnp.asarray(ar), jnp.asarray(br), r, negacyclic=negacyclic,
+        scalar_prefetch=False))
+    prefetch = np.asarray(rns_ntt_polymul(
+        jnp.asarray(ar), jnp.asarray(br), r, negacyclic=negacyclic,
+        scalar_prefetch=True))
+    assert (fallback == prefetch).all()
+    # cross-check one limb against its own single-modulus reference
+    from repro.core.ntt.ref import cyclic_polymul, negacyclic_polymul
+    fn = negacyclic_polymul if negacyclic else cyclic_polymul
+    for li in (0, r.k - 1):
+        p = r.limbs[li]
+        want = fn(ar[li], br[li], p).astype(np.uint32)
+        assert (prefetch[li] == want).all()
+
+
 # ---------------------------------------------------------------------------
 # Cross-stack differential: float FFT vs exact NTT
 # ---------------------------------------------------------------------------
