@@ -106,6 +106,11 @@ def smoke() -> None:
 
 
 REAL_COMPLEX_CYCLE_GATE = 0.65  # per-product simulated-cycle ratio ceiling
+# Distributed real tier: total interconnect bytes (all-to-all + the
+# conjugate-bin ppermute) vs the complex distributed path, per product /
+# per real-sequence pair. The per-shard Hermitian split keeps the
+# half-spectrum off the wire at full width: 3.5 vs 6 block-units ~ 0.583.
+DIST_REAL_COMPLEX_BYTE_GATE = 0.6
 
 
 def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
@@ -153,8 +158,6 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
                 n, FOURIERPIM_8, FP32)})
         emit(f"smoke/pim_polymul_real/n={n}", 0.0,
              f"cycle_ratio={ratio:.3f};gate<={REAL_COMPLEX_CYCLE_GATE}")
-        assert ratio <= REAL_COMPLEX_CYCLE_GATE, \
-            f"real/complex polymul cycle ratio regressed: {ratio:.3f}"
 
     # Interpret-mode wall clock: the serve fast path (two-for-one + paired
     # inverse = 1.5 transforms/product) must beat the complex kernel's 3
@@ -179,23 +182,73 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
                     "real_us": us_real, "complex_us": us_cplx,
                     "speedup": us_cplx / us_real})
 
+    # Distributed real tier: trace the sharded real ops on a trivial mesh,
+    # pin the collective ledger against the closed form, and gate the
+    # real/complex interconnect-byte ratio. The ratio is D-independent
+    # (every term scales with the block size), so the single-device trace
+    # is the same gate CI's 8-device tier re-asserts.
+    import jax
+
+    from repro.core.fft import distributed as dfft
+    from repro.dist import collectives
+    mesh = jax.make_mesh((1,), ("model",))
+    Bd, nd = 4, 4096
+    rspec = jax.ShapeDtypeStruct((Bd, nd), jnp.float32)
+    dist_ratios = {}
+    for op, build, args_ in (
+            ("rfft", dfft.make_sharded_rfft(mesh, batch_axes=()), (rspec,)),
+            ("polymul_real",
+             dfft.make_sharded_polymul_real(mesh, batch_axes=()),
+             (rspec, rspec))):
+        with collectives.ledger() as led:
+            jax.jit(build).lower(*args_)
+        want = dfft.four_step_collective_stats(nd, Bd, 1, op=op)
+        assert led.counts["all-to-all"] == want["a2a_count"], (op, led.as_dict())
+        assert led.bytes_by_kind["all-to-all"] == want["a2a_bytes"], \
+            (op, led.as_dict())
+        assert led.bytes_by_kind["ppermute"] == want["ppermute_bytes"], \
+            (op, led.as_dict())
+        base = dfft.four_step_collective_stats(
+            nd, Bd, 1, op="polymul" if op == "polymul_real" else "fft")
+        ratio = want["total_bytes"] / base["total_bytes"]
+        dist_ratios[op] = ratio
+        emit(f"smoke/dist_real_bytes/{op}/n={nd}", 0.0,
+             f"byte_ratio={ratio:.3f};gate<={DIST_REAL_COMPLEX_BYTE_GATE}")
+    records.append({"op": "dist-real-bytes", "n": nd, "batch": Bd,
+                    "byte_ratio": dist_ratios})
+
+    # Evaluate every gate, record the honest verdicts, and only then
+    # assert: the artifact must exist AND tell the truth on a failing run
+    # (it is uploaded with if: always() in CI).
+    cycle_ok = all(r <= REAL_COMPLEX_CYCLE_GATE for r in ratios.values())
+    bytes_ok = all(r <= DIST_REAL_COMPLEX_BYTE_GATE
+                   for r in dist_ratios.values())
+    # Timing sanity with slack for loaded shared runners (the observed
+    # speedup is 1.5-2x; the deterministic regression gates are the ratio
+    # gates above, so this only catches a grossly slower real path).
+    wallclock_ok = us_real < 1.15 * us_cplx
     out = {
         "schema": "bench_fourier/v1",
         "device_model": "FOURIERPIM_8", "spec": "fp32",
         "records": records,
         "real_complex_cycle_ratio": ratios,
+        "dist_real_complex_byte_ratio": dist_ratios,
         "gate": {"max_real_complex_cycle_ratio": REAL_COMPLEX_CYCLE_GATE,
-                 "pass": True},
+                 "max_dist_real_complex_byte_ratio":
+                     DIST_REAL_COMPLEX_BYTE_GATE,
+                 "cycle_ratio_pass": cycle_ok,
+                 "dist_byte_ratio_pass": bytes_ok,
+                 "wallclock_pass": wallclock_ok,
+                 "pass": cycle_ok and bytes_ok and wallclock_ok},
     }
-    # Write the artifact BEFORE the wall-clock assert: a noisy-runner
-    # failure must not also destroy the trajectory record.
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     emit("smoke/bench_fourier_json", 0.0, f"path={path}")
-    # Timing sanity with slack for loaded shared runners (the observed
-    # speedup is 1.5-2x; the deterministic regression gate is the cycle
-    # ratio above, so this only catches a grossly slower real path).
-    assert us_real < 1.15 * us_cplx, \
+    assert cycle_ok, \
+        f"real/complex polymul cycle ratio regressed: {ratios}"
+    assert bytes_ok, \
+        f"distributed real/complex byte ratio regressed: {dist_ratios}"
+    assert wallclock_ok, \
         f"real path grossly slower than complex in interpret mode: " \
         f"{us_real:.0f}us vs {us_cplx:.0f}us"
     return out

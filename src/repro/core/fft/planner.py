@@ -65,7 +65,8 @@ _MAX_LOCAL_N_REAL = _MAX_LOCAL_N                   # = 256K points
 
 
 def plan(n: int, batch: int, *, model_shards: int = 1,
-         exact: bool = False, real: bool = False) -> FFTPlan:
+         exact: bool = False, real: bool = False,
+         force_distributed: bool = False) -> FFTPlan:
     """Execution plan for a batch of n-point transforms.
 
     ``exact=True`` routes to the modular-NTT tier (uint32 residues, radix-2
@@ -82,6 +83,10 @@ def plan(n: int, batch: int, *, model_shards: int = 1,
     The local-n ceiling matches the complex tier (the minimum block is a
     row pair = one full complex row). Mutually exclusive with ``exact``
     (residues are not packed).
+    ``force_distributed=True`` pins the distributed tier even where the
+    policy would keep the sequence local (serve's explicit --model-shards
+    request) — shape validation still applies, so the returned plan is
+    the one actually executable, not a hand-built record.
     Raises ValueError on non-power-of-two n so misuse fails loudly instead
     of silently mis-planning (asserts vanish under ``python -O``).
     """
@@ -92,26 +97,67 @@ def plan(n: int, batch: int, *, model_shards: int = 1,
     if exact and real:
         raise ValueError("exact (mod-q) and real (Hermitian) tiers are "
                          "mutually exclusive")
+    if force_distributed and model_shards == 1:
+        raise ValueError("force_distributed needs model_shards > 1")
     if exact:
-        if n <= _MAX_LOCAL_N_EXACT or model_shards == 1:
+        if not force_distributed and (n <= _MAX_LOCAL_N_EXACT
+                                      or model_shards == 1):
             return FFTPlan(tier="local", radix=2,
                            block_b=plan_batch_block(n), seq_shards=1,
                            exact=True)
+        # The four-step NTT tiles identically to the float path (D^2 | n).
+        _check_dist_shape(n, model_shards, real=False)
         return FFTPlan(tier="distributed", radix=2, block_b=1,
                        seq_shards=model_shards, exact=True)
+    # Local tier: radix-4 halves the sweep count when n allows it. The
+    # DISTRIBUTED tiers run their local stages through the XLA Stockham
+    # (kops.fft, radix 2), so their plans record radix=2 — the plan
+    # describes what executes, not the local kernel's preference.
     radix = 4 if (n.bit_length() - 1) >= 2 else 2
     if real:
-        if n <= _MAX_LOCAL_N_REAL or model_shards == 1:
+        if not force_distributed and (n <= _MAX_LOCAL_N_REAL
+                                      or model_shards == 1):
             return FFTPlan(tier="local", radix=radix,
                            block_b=plan_batch_block(n, real=True),
                            seq_shards=1, real=True)
         # Distributed real tier: the four-step path runs the packed complex
-        # transform on z = a + i b per row pair; the Hermitian split stays a
-        # local post-pass (docs/fourier.md §distributed).
-        return FFTPlan(tier="distributed", radix=radix, block_b=1,
+        # transform on z = a + i b per row PAIR with the Hermitian split
+        # performed per shard before the ordering all-to-all, so the
+        # half-spectrum crosses the interconnect at half the complex width
+        # (core/fft/distributed.py rfft_distributed; ~0.58x the complex
+        # tier's collective bytes — docs/fourier.md §distributed).
+        # Validated at the tier's common requirement (D^2 | n, the
+        # transposes + twiddle tiling); the ordered-rfft half-width
+        # all-to-all additionally needs 2*D^2 | n, enforced where it is an
+        # op property, not a tier property: check_four_step_shape(real=
+        # ordered) in the kernel-layer wrappers. polymul_real only needs
+        # D^2 | n, so the plan must not reject shapes it can execute.
+        _check_dist_shape(n, model_shards, real=False)
+        return FFTPlan(tier="distributed", radix=2, block_b=1,
                        seq_shards=model_shards, real=True)
-    if n <= _MAX_LOCAL_N or model_shards == 1:
+    if not force_distributed and (n <= _MAX_LOCAL_N or model_shards == 1):
         return FFTPlan(tier="local", radix=radix,
                        block_b=plan_batch_block(n), seq_shards=1)
-    return FFTPlan(tier="distributed", radix=radix, block_b=1,
+    _check_dist_shape(n, model_shards, real=False)
+    return FFTPlan(tier="distributed", radix=2, block_b=1,
                    seq_shards=model_shards)
+
+
+def _check_dist_shape(n: int, model_shards: int, *, real: bool) -> None:
+    """Reject shapes the four-step decomposition cannot tile.
+
+    The distributed tier needs D^2 | n (2*D^2 | n for the real tier's
+    half-width ordering all-to-all). Such a shape cannot be re-tiered
+    locally either — the planner only reaches here when n exceeds the
+    local VMEM ceiling — so mis-sized shard counts fail at plan time
+    instead of surfacing as truncated twiddle blocks mid-trace
+    (``core.fft.distributed.check_four_step_shape`` is the same guard at
+    the kernel layer).
+    """
+    from repro.core.fft.distributed import check_four_step_shape
+    try:
+        check_four_step_shape(n, model_shards, real=real)
+    except ValueError as e:
+        raise ValueError(
+            f"cannot plan a distributed {'real ' if real else ''}FFT for "
+            f"n={n} over {model_shards} shards: {e}") from e

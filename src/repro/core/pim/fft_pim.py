@@ -284,6 +284,177 @@ def rfft_throughput_per_s(n: int, cfg: PIMConfig, spec: aritpim.FloatSpec
 
 
 # ---------------------------------------------------------------------------
+# Distributed real-Hermitian path: four-step FFT across crossbar arrays
+# (paper §7's multi-crossbar future work, real-input serving tier).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PIMDistRFFTResult:
+    #: (2, n//2 + 1) complex half-spectra of the two packed real sequences
+    spectra: np.ndarray
+    #: per-shard cycle/gate counters (each shard == the closed form)
+    shard_counters: tuple
+    #: inter-array transpose traffic, the TPU ledger's all-to-all analogue
+    a2a_bytes: int
+    #: conjugate-bin mirror route (the half-block ppermute), in bytes
+    permute_bytes: int
+
+
+def _phase_a_fft(sim: CrossbarSim, block: np.ndarray, n1: int,
+                 active_rows: int) -> np.ndarray:
+    """Length-n1 FFT down the column dimension of a (n1, w) block with
+    r-layout alignment moves per stage — the float twin of the NTT model's
+    phase A (``ntt_pim._phase_a_ntt``)."""
+    y = block[_bit_reverse_perm(n1)].astype(np.complex128)
+    for s in range(n1.bit_length() - 1):
+        m = 2 << s
+        half = m >> 1
+        idx = np.arange(n1).reshape(n1 // m, m)
+        top = idx[:, :half].ravel()
+        bot = idx[:, half:].ravel()
+        w = np.tile(_twiddles(m, False), n1 // m)[:, None]
+        sim.charge_twiddle_writes(active_rows)
+        sim.charge_column_op("copy", active_rows)
+        sim.charge_row_ops(active_rows, cycles_per_row=2)
+        sim.charge_column_op("copy", active_rows)
+        sim.charge_row_ops(active_rows, cycles_per_row=2)
+        u, v = sim.butterfly_rows(y[top], y[bot], w, active_rows)
+        y[top], y[bot] = u, v
+    return y
+
+
+def pim_rfft_distributed(x: np.ndarray, y: np.ndarray, n_shards: int,
+                         cfg: PIMConfig, spec: aritpim.FloatSpec
+                         ) -> PIMDistRFFTResult:
+    """Half-spectra of TWO real sequences via ONE four-step packed complex
+    FFT across ``n_shards`` crossbar arrays.
+
+    n = n1 * n2 with n1 = D shards and n2 = n / D = crossbar rows. The
+    Hermitian split (Eq. (10)) is charged PER SHARD (``realpack_unpack_
+    cycles``: the within-shard order reversal, conjugate, adds and
+    half-scales) and the cross-shard conjugate-bin route — Z-order bin
+    k = idx + D*k2 mirrors onto shard (D - idx) mod D — is a half-block
+    periphery move charged as BYTES (``permute_bytes``), the same unit as
+    the two inter-array transposes (``a2a_bytes``). Matches np.fft.rfft
+    numerically and the closed forms ``rfft_distributed_latency_cycles`` /
+    ``rfft_distributed_a2a_bytes`` (tests/test_pim.py); total moved bytes
+    land at ~0.58x the complex distributed path's per real sequence.
+    """
+    n = len(x)
+    D = n_shards
+    if D < 2 or D & (D - 1):
+        raise ValueError(f"n_shards={D} must be a power of two >= 2")
+    n2 = n // D
+    if n2 != cfg.crossbar_rows:
+        # ValueError, not assert: a wrong-geometry cost model under
+        # ``python -O`` would silently report counters for the wrong shape.
+        raise ValueError(f"four-step PIM wants n/D == rows "
+                         f"({cfg.crossbar_rows}), got {n2}")
+    if len(y) != n:
+        raise ValueError(f"sequence lengths differ: {n} vs {len(y)}")
+    z = np.asarray(x, np.float64) + 1j * np.asarray(y, np.float64)
+    sims = [CrossbarSim(cfg, spec) for _ in range(D)]
+    M = z.reshape(D, n2)                               # row j1
+    wcol = n2 // D
+    # Step 1 transpose: shard s owns all j1 for j2 slice s.
+    blocks = [M[:, s * wcol:(s + 1) * wcol].copy() for s in range(D)]
+    for s, sim in enumerate(sims):
+        yv = _phase_a_fft(sim, blocks[s], D, active_rows=n2 // 2)
+        # Step 3: twiddle w^{j2 k1} with GLOBAL j2, exact integer exponents
+        # reduced mod n (the same fix as core/fft/distributed.py) — one
+        # column-parallel complex multiply over the shard's working set.
+        j2 = np.arange(s * wcol, (s + 1) * wcol, dtype=np.int64)
+        k1 = np.arange(D, dtype=np.int64)[:, None]
+        tw = np.exp(-2j * np.pi * ((k1 * j2[None, :]) % n) / n)
+        blocks[s] = yv * tw
+        sim.charge_column_op("cmul", cfg.crossbar_rows)
+    # Step 4 transpose: shard s owns row k1 = s, all j2.
+    Y = np.concatenate(blocks, axis=1)                 # (D=k1, n2=j2)
+    Z = np.empty((D, n2), np.complex128)
+    for s, sim in enumerate(sims):
+        def transition(stage):
+            sim.charge_column_op("copy", n2 // 2)
+            sim.charge_row_ops(n2 // 2, cycles_per_row=2)
+            sim.charge_column_op("copy", n2 // 2)
+            sim.charge_row_ops(n2 // 2, cycles_per_row=2)
+        # Phase-B input bit-reversal, before the group loop (r-config).
+        sim.charge_row_ops(_perm_swap_count(n2), cycles_per_row=6,
+                           tag="perm")
+        Z[s] = _fft_groups(sim, Y[s], inverse=False, serial_units=1,
+                           active_rows=n2 // 2, transition_fn=transition)
+        # Per-shard Eq. (10) split: reversal/conjugate/adds/half-scales on
+        # the shard's own block (the cross-shard mirror is permute_bytes).
+        unpack = realpack_unpack_cycles(cfg, spec)
+        sim.ctr.cycles += unpack
+        sim.ctr.gates += unpack * cfg.crossbar_rows
+    # Z-order assembly X[k1 + k2 n1] = Z[k1, k2] (host-side view), then the
+    # numerical split — the per-shard charges above already costed it.
+    fz = Z.T.reshape(n)
+    fa, fb = _hermitian_split(fz)
+    half = n // 2 + 1
+    return PIMDistRFFTResult(
+        spectra=np.stack([fa[:half], fb[:half]]),
+        shard_counters=tuple(s.ctr for s in sims),
+        a2a_bytes=rfft_distributed_a2a_bytes(n, spec),
+        permute_bytes=rfft_distributed_permute_bytes(n, spec))
+
+
+def fft_distributed_latency_cycles(n: int, n_shards: int, cfg: PIMConfig,
+                                   spec: aritpim.FloatSpec) -> int:
+    """Closed-form per-shard cycles of the four-step complex FFT (== every
+    shard's counter in ``pim_rfft_distributed`` before the split charge):
+    log2(D) r-layout column stages, one twiddle cmul, then a full r-config
+    FFT of length n/D."""
+    D = n_shards
+    n2 = n // D
+    r = cfg.crossbar_rows
+    assert n2 == r, (n, D, r)
+    stage_a = (r // 2                                  # twiddle writes
+               + 2 * aritpim.op_cycles("copy", spec) + 2 * (r // 2) * 2
+               + aritpim.op_cycles("butterfly", spec))
+    phase_a = (D.bit_length() - 1) * stage_a
+    twiddle = aritpim.op_cycles("cmul", spec)
+    phase_b = fft_latency_cycles(n2, cfg, spec, charge_perm=True)
+    return phase_a + twiddle + phase_b
+
+
+def rfft_distributed_latency_cycles(n: int, n_shards: int, cfg: PIMConfig,
+                                    spec: aritpim.FloatSpec) -> int:
+    """Per-shard cycles including the Eq. (10) split (two real sequences
+    ride the run, as in ``pim_rfft``)."""
+    return (fft_distributed_latency_cycles(n, n_shards, cfg, spec)
+            + realpack_unpack_cycles(cfg, spec))
+
+
+def _word_bytes(spec) -> int:
+    return aritpim.storage_word_bits(spec) // 8
+
+
+def fft_distributed_a2a_bytes(n: int, spec, *, ordered: bool = True) -> int:
+    """Inter-array transpose traffic of the four-step complex FFT, per
+    transform: two in-fabric transposes plus (``ordered``) the Z-order ->
+    natural reorder, each moving every complex word once. Unlike the NTT
+    model (which leaves Z-order assembly as a host view), the serving tier
+    returns natural order, so the ordering transpose is charged — the same
+    convention as the TPU ledger's ``four_step_collective_stats``."""
+    return (3 if ordered else 2) * n * _word_bytes(spec)
+
+
+def rfft_distributed_a2a_bytes(n: int, spec) -> int:
+    """Transpose traffic of the packed real four-step (TWO real sequences):
+    two full-width transposes of the packed transform plus the ordering
+    move of the two packed half-spectra (2 x n/2 = n words) — the
+    half-spectrum never crosses at full complex width."""
+    return (2 * n + n) * _word_bytes(spec)
+
+
+def rfft_distributed_permute_bytes(n: int, spec) -> int:
+    """The conjugate-bin mirror route: each shard ships the upper half of
+    its Z-order block to its mirror peer — n/2 words total."""
+    return (n // 2) * _word_bytes(spec)
+
+
+# ---------------------------------------------------------------------------
 # Closed forms (benchmarks at scale; asserted == simulator in tests)
 # ---------------------------------------------------------------------------
 

@@ -67,15 +67,20 @@ def ifft(x: jax.Array, **kw) -> jax.Array:
 # without the O(n) repack — the layout that never leaves HBM at full width.
 # ---------------------------------------------------------------------------
 
-def _packed_to_halfspec(yr: jax.Array, yi: jax.Array) -> jax.Array:
-    """Packed-Nyquist planes (..., n/2) -> numpy-layout (..., n/2+1)."""
+def packed_to_halfspec(yr: jax.Array, yi: jax.Array) -> jax.Array:
+    """Packed-Nyquist planes (..., n/2) -> numpy-layout (..., n/2+1).
+
+    Public: the distributed real tier (``core.fft.rfft_distributed``)
+    emits the same packed layout as the local kernels, and its callers
+    repack with this converter (it is the single layout definition).
+    """
     zero = jnp.zeros_like(yr[..., :1])
     re = jnp.concatenate([yr, yi[..., :1]], axis=-1)
     im = jnp.concatenate([zero, yi[..., 1:], zero], axis=-1)
     return (re + 1j * im).astype(jnp.complex64)
 
 
-def _halfspec_to_packed(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+def halfspec_to_packed(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Numpy-layout half-spectrum (..., n/2+1) -> packed planes (..., n/2)."""
     nh = x.shape[-1] - 1
     re = jnp.real(x).astype(jnp.float32)
@@ -83,6 +88,12 @@ def _halfspec_to_packed(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     pr = re[..., :nh]
     pi = jnp.concatenate([re[..., nh:], im[..., 1:nh]], axis=-1)
     return pr, pi
+
+
+# Pre-rename aliases (the converters became public with the distributed
+# real tier).
+_packed_to_halfspec = packed_to_halfspec
+_halfspec_to_packed = halfspec_to_packed
 
 
 def rfft(x: jax.Array, *, backend: str | None = None, radix: int = 2,

@@ -30,7 +30,14 @@ from repro.optim import adamw
 
 def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
                     grad_transform: Optional[Callable] = None, *,
-                    pod_axis: Optional[str] = None) -> Callable:
+                    pod_axis: Optional[str] = None,
+                    data_axis: Optional[str] = None) -> Callable:
+    """``data_axis`` (pod variant only) names an intra-pod data-parallel
+    shard_map axis the batch is also sharded over: gradients mean-reduce
+    across it FIRST (cheap ICI psum), so the cross-pod compressed psum
+    sees one gradient per pod and every device applies the same update.
+    Without it, a batch sharded over (pod, data) would silently leave the
+    data-axis contributions unreduced."""
     accum = max(1, cfg.grad_accum_steps)
 
     def compute_grads(params, batch):
@@ -71,9 +78,14 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
     from repro.dist import collectives
 
     def train_step_pod(params, opt_state, grad_err, batch):
-        """Per-pod body: local grads -> clip -> int8 compressed cross-pod
-        mean (error feedback carried in grad_err) -> replicated update."""
+        """Per-pod body: local grads -> (intra-pod data mean) -> clip ->
+        int8 compressed cross-pod mean (error feedback carried in
+        grad_err) -> replicated update."""
         loss, grads = compute_grads(params, batch)
+        if data_axis is not None:
+            grads = jax.tree.map(
+                lambda g: collectives.pmean(g, data_axis), grads)
+            loss = collectives.pmean(loss, data_axis)
         grads, gnorm = adamw.clip_by_global_norm(grads, opt_cfg.grad_clip)
         grads, grad_err = collectives.compressed_psum(grads, grad_err,
                                                       pod_axis)

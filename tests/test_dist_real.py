@@ -1,0 +1,357 @@
+"""Distributed real-Hermitian tier: differential tests + ledger parity.
+
+Unit half (single real device, D=1 mesh): twiddle-precision regression,
+values vs numpy, ledger == closed form, planner routing and shape guards.
+Dist half (subprocess, 8 virtual devices): the same contracts at D=8,
+n in {2^12, 2^20}, plus the serve endpoint.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import run_in_subprocess_devices
+from repro.core import fft as fft_core
+from repro.core.fft import distributed as dfft
+from repro.dist import collectives
+
+
+def _packed_ref(x: np.ndarray) -> np.ndarray:
+    """np.fft.rfft in the kernels' packed-Nyquist layout (B, n/2)."""
+    n = x.shape[-1]
+    full = np.fft.rfft(x.astype(np.float64))
+    packed = full[..., :n // 2].copy()
+    packed[..., 0] = full[..., 0].real + 1j * full[..., n // 2].real
+    return packed
+
+
+def _circular_ref(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Circular product via the f64 FFT oracle."""
+    return np.fft.ifft(np.fft.fft(a.astype(np.float64))
+                       * np.fft.fft(b.astype(np.float64))).real
+
+
+# ---------------------------------------------------------------------------
+# fp32-twiddle regression (the PR-5 bugfix pin)
+# ---------------------------------------------------------------------------
+
+def test_fp32_twiddle_regression_exact_integer_exponents():
+    """The step-3 twiddle block must match float64 ground truth to
+    ~fp32-rounding accuracy at large n.
+
+    The pre-fix code built the angles as ``2*pi*(k1*j2)/n`` with float32
+    ``k1*j2`` products and a separately rounded device-phase factor inside
+    the trace — several f32 roundings per twiddle, ~4e-7 worst-case error
+    (the first assert reproduces that formula and pins the failure). The
+    fixed path reduces exponents mod n in int64 and evaluates angles in
+    float64 host-side, rounding ONCE to complex64 (~4e-8): the 1.5e-7
+    bound below fails on the pre-fix computation and passes post-fix.
+    """
+    n, D = 1 << 20, 8
+    n1, width = D, (n // D) // D
+    worst_prefix, worst_fixed = 0.0, 0.0
+    for idx in range(D):
+        k1i = np.arange(n1, dtype=np.int64)[:, None]
+        j2i = (idx * width + np.arange(width, dtype=np.int64))[None, :]
+        truth = np.exp(-2j * np.pi * ((k1i * j2i) % n) / n)
+
+        # The pre-fix formula: f32 products, f32 angles, two rounded factors.
+        k1 = jnp.arange(n1, dtype=jnp.float32)[:, None]
+        j2 = jnp.arange(width, dtype=jnp.float32)[None, :]
+        ang = -2.0 * jnp.pi * (k1 * j2) / n
+        tw = jnp.cos(ang) + 1j * jnp.sin(ang)
+        ang2 = -2.0 * jnp.pi * k1[:, 0] * (np.float32(idx) * width) / n
+        phase = (jnp.cos(ang2) + 1j * jnp.sin(ang2))[:, None]
+        worst_prefix = max(worst_prefix,
+                           float(np.max(np.abs(np.asarray(tw * phase)
+                                               - truth))))
+
+        fixed = np.asarray(dfft._twiddle(n, n1, width, jnp.int32(idx),
+                                         inverse=False))
+        worst_fixed = max(worst_fixed,
+                          float(np.max(np.abs(fixed - truth))))
+    assert worst_prefix > 2.5e-7, \
+        f"pre-fix formula unexpectedly accurate ({worst_prefix:.2e}) — " \
+        f"did the bug this test documents get re-fixed upstream?"
+    assert worst_fixed < 1.5e-7, \
+        f"twiddle block drifted from f64 ground truth: {worst_fixed:.2e}"
+
+
+def test_twiddle_forward_inverse_conjugate():
+    n, D = 4096, 8
+    fwd = np.asarray(dfft._twiddle(n, D, (n // D) // D, jnp.int32(3), False))
+    inv = np.asarray(dfft._twiddle(n, D, (n // D) // D, jnp.int32(3), True))
+    np.testing.assert_allclose(inv, np.conj(fwd), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Shape guards (the silent-truncation bugfix pin)
+# ---------------------------------------------------------------------------
+
+def test_four_step_shape_guard():
+    dfft.check_four_step_shape(512, 8)            # D^2 = 64 | 512
+    dfft.check_four_step_shape(1024, 8, real=True)  # 2 D^2 = 128 | 1024
+    for n, d, real in ((32, 8, False), (96, 8, False), (8, 4, False),
+                       (64, 8, True), (2048, 3, False)):
+        with pytest.raises(ValueError, match="four-step"):
+            dfft.check_four_step_shape(n, d, real=real)
+
+
+def test_planner_rejects_untileable_distributed_shapes():
+    big = 1 << 19   # above the local VMEM ceiling -> distributed tier
+    plan = fft_core.plan(big, 4, model_shards=8)
+    assert plan.tier == "distributed" and not plan.real
+    plan = fft_core.plan(big, 4, model_shards=8, real=True)
+    assert plan.tier == "distributed" and plan.real
+    with pytest.raises(ValueError, match="cannot plan"):
+        fft_core.plan(big, 4, model_shards=3)
+    with pytest.raises(ValueError, match="cannot plan"):
+        fft_core.plan(big, 4, model_shards=3, real=True)
+    # below the ceiling the planner keeps the local tier regardless of D
+    assert fft_core.plan(4096, 4, model_shards=3).tier == "local"
+
+
+def test_distributed_real_requires_even_batch():
+    mesh = jax.make_mesh((1,), ("model",))
+    x = jnp.zeros((3, 256), jnp.float32)
+    with pytest.raises(ValueError, match="even"):
+        jax.jit(dfft.make_sharded_rfft(mesh, batch_axes=()))(x)
+
+
+# ---------------------------------------------------------------------------
+# Values + ledger on the single-device mesh (unit tier)
+# ---------------------------------------------------------------------------
+
+def test_rfft_irfft_polymul_distributed_single_device(rng):
+    mesh = jax.make_mesh((1,), ("model",))
+    B, n = 4, 512
+    x = rng.standard_normal((B, n)).astype(np.float32)
+    p = np.asarray(jax.jit(dfft.make_sharded_rfft(mesh, batch_axes=()))(
+        jnp.asarray(x)))
+    assert p.shape == (B, n // 2) and p.dtype == np.complex64
+    ref = _packed_ref(x)
+    assert np.max(np.abs(p - ref)) / np.max(np.abs(ref)) < 1e-5
+    # the packed layout converts with the kernels' own converter
+    half = np.asarray(fft_core.packed_to_halfspec(jnp.real(jnp.asarray(p)),
+                                                  jnp.imag(jnp.asarray(p))))
+    np.testing.assert_allclose(half, np.fft.rfft(x.astype(np.float64)),
+                               atol=2e-3)
+    back = np.asarray(jax.jit(dfft.make_sharded_irfft(mesh, batch_axes=()))(
+        jnp.asarray(p)))
+    assert back.dtype == np.float32
+    assert np.max(np.abs(back - x)) < 1e-5
+
+    a = rng.standard_normal((B, n)).astype(np.float32)
+    b = rng.standard_normal((B, n)).astype(np.float32)
+    c = np.asarray(jax.jit(dfft.make_sharded_polymul_real(
+        mesh, batch_axes=()))(jnp.asarray(a), jnp.asarray(b)))
+    want = _circular_ref(a, b)
+    assert np.max(np.abs(c - want)) / np.max(np.abs(want)) < 1e-5
+
+
+def test_dist_real_ledger_parity_single_device():
+    mesh = jax.make_mesh((1,), ("model",))
+    B, n = 6, 1024
+    rspec = jax.ShapeDtypeStruct((B, n), jnp.float32)
+    pspec = jax.ShapeDtypeStruct((B, n // 2), jnp.complex64)
+    cases = (
+        ("rfft", dfft.make_sharded_rfft(mesh, batch_axes=()), (rspec,)),
+        ("irfft", dfft.make_sharded_irfft(mesh, batch_axes=()), (pspec,)),
+        ("polymul_real", dfft.make_sharded_polymul_real(mesh, batch_axes=()),
+         (rspec, rspec)),
+    )
+    for op, fn, args in cases:
+        with collectives.ledger() as led:
+            jax.jit(fn).lower(*args)
+        want = dfft.four_step_collective_stats(n, B, 1, op=op)
+        assert led.counts["all-to-all"] == want["a2a_count"], (op, led.as_dict())
+        assert led.bytes_by_kind["all-to-all"] == want["a2a_bytes"], \
+            (op, led.as_dict())
+        assert led.counts["ppermute"] == want["ppermute_count"], \
+            (op, led.as_dict())
+        assert led.bytes_by_kind["ppermute"] == want["ppermute_bytes"], \
+            (op, led.as_dict())
+
+
+def test_collective_stats_real_vs_complex_ratio():
+    for n, B, D in ((4096, 4, 1), (4096, 8, 8), (1 << 20, 2, 8)):
+        rfft = dfft.four_step_collective_stats(n, B, D, op="rfft")
+        fft = dfft.four_step_collective_stats(n, B, D, op="fft")
+        pm_r = dfft.four_step_collective_stats(n, B, D, op="polymul_real")
+        pm_c = dfft.four_step_collective_stats(n, B, D, op="polymul")
+        assert rfft["total_bytes"] / fft["total_bytes"] <= 0.6
+        assert pm_r["total_bytes"] / pm_c["total_bytes"] <= 0.6
+    with pytest.raises(ValueError, match="even"):
+        dfft.four_step_collective_stats(4096, 3, 8, op="rfft")
+    with pytest.raises(ValueError, match="unknown op"):
+        dfft.four_step_collective_stats(4096, 2, 8, op="nope")
+
+
+# ---------------------------------------------------------------------------
+# 8-virtual-device tier (subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.dist
+def test_dist_real_differential_8dev():
+    """rfft vs np.fft.rfft, irfft roundtrip, and polymul_real vs the
+    schoolbook circular product at n = 2^12 on a (data, model) mesh."""
+    out = run_in_subprocess_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core.fft import distributed as dfft
+
+mesh = jax.make_mesh((1, 8), ("data", "model"))
+sh = NamedSharding(mesh, P("data", "model"))
+rng = np.random.default_rng(0)
+B, n = 4, 4096
+x = rng.standard_normal((B, n)).astype(np.float32)
+xj = jax.device_put(jnp.asarray(x), sh)
+
+p = np.asarray(jax.jit(dfft.make_sharded_rfft(mesh))(xj))
+full = np.fft.rfft(x.astype(np.float64))
+packed = full[:, :n//2].copy()
+packed[:, 0] = full[:, 0].real + 1j * full[:, n//2].real
+err = np.max(np.abs(p - packed)) / np.max(np.abs(packed))
+assert err < 1e-5, f"rfft err {err}"
+
+back = np.asarray(jax.jit(dfft.make_sharded_irfft(mesh))(
+    jax.device_put(jnp.asarray(p), sh)))
+err = np.max(np.abs(back - x))
+assert err < 1e-4, f"irfft roundtrip err {err}"
+
+a = rng.standard_normal((B, n)).astype(np.float32)
+b = rng.standard_normal((B, n)).astype(np.float32)
+c = np.asarray(jax.jit(dfft.make_sharded_polymul_real(mesh))(
+    jax.device_put(jnp.asarray(a), sh), jax.device_put(jnp.asarray(b), sh)))
+# schoolbook circular product (linear convolve in f64, folded mod x^n - 1)
+want = np.empty((B, n))
+for i in range(B):
+    lin = np.convolve(a[i].astype(np.float64), b[i].astype(np.float64))
+    want[i] = lin[:n] + np.concatenate([lin[n:], [0.0]])
+err = np.max(np.abs(c - want)) / np.max(np.abs(want))
+assert err < 1e-5, f"polymul err {err}"
+
+# divisibility guard fires loudly at call time
+try:
+    dfft.make_sharded_fft(mesh)(jnp.zeros((1, 32), jnp.complex64))
+except ValueError as e:
+    assert "four-step" in str(e)
+else:
+    raise AssertionError("n=32 over D=8 should be rejected")
+print("OK")
+""", n_devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.dist
+def test_dist_real_large_n_8dev():
+    """The serving shape the distributed tier exists for: n = 2^20 over 8
+    shards stays within fp32 tolerance of the f64 numpy oracle (this is
+    the end-to-end side of the fp32-twiddle regression pin)."""
+    out = run_in_subprocess_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core.fft import distributed as dfft
+
+mesh = jax.make_mesh((1, 8), ("data", "model"))
+sh = NamedSharding(mesh, P("data", "model"))
+rng = np.random.default_rng(0)
+B, n = 2, 1 << 20
+x = rng.standard_normal((B, n)).astype(np.float32)
+p = np.asarray(jax.jit(dfft.make_sharded_rfft(mesh))(
+    jax.device_put(jnp.asarray(x), sh)))
+full = np.fft.rfft(x.astype(np.float64))
+packed = full[:, :n//2].copy()
+packed[:, 0] = full[:, 0].real + 1j * full[:, n//2].real
+err = np.max(np.abs(p - packed)) / np.max(np.abs(packed))
+assert err < 2e-6, f"rfft n=2^20 err {err}"
+
+a = rng.standard_normal((B, n)).astype(np.float32)
+b = rng.standard_normal((B, n)).astype(np.float32)
+c = np.asarray(jax.jit(dfft.make_sharded_polymul_real(mesh))(
+    jax.device_put(jnp.asarray(a), sh), jax.device_put(jnp.asarray(b), sh)))
+want = np.fft.ifft(np.fft.fft(a.astype(np.float64))
+                   * np.fft.fft(b.astype(np.float64))).real
+err = np.max(np.abs(c - want)) / np.max(np.abs(want))
+assert err < 2e-6, f"polymul n=2^20 err {err}"
+print("OK")
+""", n_devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.dist
+def test_dist_real_ledger_parity_8dev():
+    """Byte-ledger == closed form at D=8, and the real/complex total-byte
+    ratio holds the <= 0.6 gate (the tentpole's traffic contract)."""
+    out = run_in_subprocess_devices("""
+import jax, jax.numpy as jnp
+from repro.core.fft import distributed as dfft
+from repro.dist import collectives
+
+mesh = jax.make_mesh((1, 8), ("data", "model"))
+B, n, D = 4, 4096, 8
+rspec = jax.ShapeDtypeStruct((B, n), jnp.float32)
+pspec = jax.ShapeDtypeStruct((B, n // 2), jnp.complex64)
+for op, fn, args in (
+        ("rfft", dfft.make_sharded_rfft(mesh), (rspec,)),
+        ("irfft", dfft.make_sharded_irfft(mesh), (pspec,)),
+        ("polymul_real", dfft.make_sharded_polymul_real(mesh),
+         (rspec, rspec))):
+    with collectives.ledger() as led:
+        jax.jit(fn).lower(*args)
+    want = dfft.four_step_collective_stats(n, B, D, op=op)
+    assert led.counts["all-to-all"] == want["a2a_count"], (op, led.as_dict())
+    assert led.bytes_by_kind["all-to-all"] == want["a2a_bytes"], (op, led.as_dict())
+    assert led.counts["ppermute"] == want["ppermute_count"], (op, led.as_dict())
+    assert led.bytes_by_kind["ppermute"] == want["ppermute_bytes"], (op, led.as_dict())
+
+real = dfft.four_step_collective_stats(n, B, D, op="polymul_real")
+cplx = dfft.four_step_collective_stats(n, B, D, op="polymul")
+ratio = real["total_bytes"] / cplx["total_bytes"]
+assert ratio <= 0.6, ratio
+print("OK ratio", round(ratio, 4))
+""", n_devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.dist
+def test_serve_polymul_real_distributed_8dev():
+    """``--op polymul-real --model-shards 8`` dispatches the distributed
+    real tier (route + plan recorded), matches the LOCAL fused kernel
+    numerically, and the end-to-end driver completes."""
+    out = run_in_subprocess_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.launch import serve
+from repro.core import fft as fft_core
+
+svc = serve.FFTService(1024, 4, "polymul-real", model_shards=8)
+assert svc.route == "polymul-real-distributed", svc.route
+assert svc.plan.tier == "distributed" and svc.plan.real
+assert svc.plan.seq_shards == 8
+rng = np.random.default_rng(0)
+a = rng.standard_normal((4, 1024)).astype(np.float32)
+b = rng.standard_normal((4, 1024)).astype(np.float32)
+got = np.asarray(svc._fn(jnp.asarray(a), jnp.asarray(b)))
+local = np.asarray(fft_core.polymul_real(jnp.asarray(a), jnp.asarray(b),
+                                         mode="circular"))
+err = np.max(np.abs(got - local))
+assert err < 1e-3, f"distributed serve vs local kernel: {err}"
+
+# shape guards fire loudly at service construction
+for bad in (dict(n=96), dict(batch=3)):
+    kw = dict(n=1024, batch=4); kw.update(bad)
+    try:
+        serve.FFTService(kw["n"], kw["batch"], "polymul-real", model_shards=8)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError(f"should reject {bad}")
+
+stats = serve.main(["--service", "fft", "--n", "1024", "--batch", "4",
+                    "--requests", "8", "--op", "polymul-real",
+                    "--model-shards", "8"])
+assert stats["served"] == 8, stats
+print("OK")
+""", n_devices=8)
+    assert "OK" in out

@@ -241,3 +241,43 @@ def test_batch_plan_helper_on_distributed_fft():
     plan = dfft.batch_plan(mesh, 5)
     assert plan.mesh_plan.per_device == 5
     assert plan.report()["mesh_axes"] == ["data"]
+
+
+def test_batch_plan_mesh_without_pod_axis():
+    """batch_plan promises pod-level batching, but single-pod meshes have
+    no "pod" axis: shard_batch must skip absent axes (not KeyError, not
+    silently plan for 1 device) and the pad/utilization accounting must
+    match the closed form. A stub mesh suffices — dist.batching is pure
+    scheduling arithmetic over mesh.shape."""
+    import math
+    import types
+
+    from repro.core.fft.distributed import batch_plan
+
+    mesh = types.SimpleNamespace(shape={"data": 4, "model": 2})
+    plan = batch_plan(mesh, 10, transforms_per_device=3)
+    mp = plan.mesh_plan
+    assert mp.axes == ("data",)              # pod absent -> skipped
+    assert mp.n_devices == 4                 # model never carries batch
+    assert mp.per_device == math.ceil(10 / 4) == 3
+    assert mp.pad == 3 * 4 - 10 == 2
+    assert mp.utilization == pytest.approx(10 / 12)
+    # per-device waves: 3 transforms over 3 arrays = 1 full wave
+    assert plan.waves == 1 and plan.wave.tail == 0
+    assert plan.utilization == pytest.approx(10 / (4 * 1 * 3))
+    assert plan.throughput(2.0) == pytest.approx(10 / 2.0)
+
+    # pod axis present: both axes multiply into the device count
+    pod_mesh = types.SimpleNamespace(shape={"pod": 2, "data": 4, "model": 2})
+    pp = batch_plan(pod_mesh, 16, transforms_per_device=1)
+    assert pp.mesh_plan.axes == ("pod", "data")
+    assert pp.mesh_plan.n_devices == 8
+    assert pp.mesh_plan.per_device == 2 and pp.mesh_plan.pad == 0
+    assert pp.utilization == 1.0
+
+    # and on a REAL mesh (the single-CPU case CI runs on)
+    real_mesh = jax.make_mesh((1,), ("data",))
+    rp = batch_plan(real_mesh, 5, transforms_per_device=2)
+    assert rp.mesh_plan.axes == ("data",) and rp.mesh_plan.n_devices == 1
+    assert rp.waves == 3 and rp.wave.tail == 1
+    assert rp.utilization == pytest.approx(5 / 6)

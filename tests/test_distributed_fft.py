@@ -64,3 +64,33 @@ print(f"ordered={ordered} polymul={pm_n}")
 assert pm_n < 3 * ordered, (ordered, pm_n)
 """, n_devices=8)
     assert "ordered=" in out
+
+
+def test_fft_distributed_fp32_accuracy_large_n_8dev():
+    """n = 2^20 over 8 shards stays within fp32 tolerance of the f64
+    numpy oracle — the end-to-end half of the fp32-twiddle regression pin
+    (the table-level half, which fails on the pre-fix float32 twiddle
+    arithmetic, is tests/test_dist_real.py::
+    test_fp32_twiddle_regression_exact_integer_exponents)."""
+    out = run_in_subprocess_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core.fft import distributed as dfft
+
+mesh = jax.make_mesh((1, 8), ("data", "model"))
+sh = NamedSharding(mesh, P("data", "model"))
+rng = np.random.default_rng(0)
+n = 1 << 20
+x = rng.standard_normal((1, n)) + 1j * rng.standard_normal((1, n))
+xj = jax.device_put(jnp.asarray(x, jnp.complex64), sh)
+y = np.asarray(jax.jit(dfft.make_sharded_fft(mesh))(xj))
+want = np.fft.fft(x)
+err = np.max(np.abs(y - want)) / np.max(np.abs(want))
+assert err < 2e-6, f"fwd rel err {err}"
+back = np.asarray(jax.jit(dfft.make_sharded_fft(mesh, inverse=True))(
+    jax.device_put(jnp.asarray(y), sh)))
+err = np.max(np.abs(back - x)) / np.max(np.abs(x))
+assert err < 2e-6, f"roundtrip rel err {err}"
+print("OK")
+""", n_devices=8)
+    assert "OK" in out

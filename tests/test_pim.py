@@ -303,3 +303,61 @@ def test_nor_ripple_adder_matches_integer_add(rng):
             s_bits.append(s)
         got = sum(b << i for i, b in enumerate(s_bits)) + (cin << n)
         assert got == x + y
+
+
+# ---------------------------------------------------------------------------
+# Distributed real-Hermitian path (four-step across crossbar arrays)
+# ---------------------------------------------------------------------------
+
+def test_pim_rfft_distributed_matches_numpy_and_closed_forms(rng):
+    """Value-exact vs np.fft.rfft, every shard's cycle counter == the
+    closed form, and the byte fields == their closed forms — the PIM side
+    of the distributed-rfft cost-model contract (the TPU-ledger side lives
+    in tests/test_dist_real.py)."""
+    from repro.core.pim import (fft_distributed_a2a_bytes,
+                                fft_distributed_latency_cycles,
+                                pim_rfft_distributed,
+                                rfft_distributed_a2a_bytes,
+                                rfft_distributed_latency_cycles,
+                                rfft_distributed_permute_bytes)
+    for D in (2, 8):
+        n = D * FOURIERPIM_8.crossbar_rows
+        x = rng.standard_normal(n)
+        y = rng.standard_normal(n)
+        res = pim_rfft_distributed(x, y, D, FOURIERPIM_8, FP32)
+        want = np.stack([np.fft.rfft(x), np.fft.rfft(y)])
+        assert np.max(np.abs(res.spectra - want)) < 1e-8 * np.max(np.abs(want))
+        closed = rfft_distributed_latency_cycles(n, D, FOURIERPIM_8, FP32)
+        assert {c.cycles for c in res.shard_counters} == {closed}
+        assert res.a2a_bytes == rfft_distributed_a2a_bytes(n, FP32)
+        assert res.permute_bytes == rfft_distributed_permute_bytes(n, FP32)
+        # the split charge is the only delta on top of the complex closed form
+        assert closed > fft_distributed_latency_cycles(n, D, FOURIERPIM_8,
+                                                       FP32)
+
+
+def test_pim_rfft_distributed_byte_ratio_gate(rng):
+    """Total interconnect bytes (transposes + conjugate-bin permute) of the
+    packed real four-step stay <= 0.6x the complex distributed path for the
+    same two real sequences — the tentpole's traffic target, in the PIM
+    model's whole-array byte unit."""
+    from repro.core.pim import (fft_distributed_a2a_bytes,
+                                rfft_distributed_a2a_bytes,
+                                rfft_distributed_permute_bytes)
+    for n in (2048, 8192, 1 << 20):
+        real = (rfft_distributed_a2a_bytes(n, FP32)
+                + rfft_distributed_permute_bytes(n, FP32))
+        cplx = 2 * fft_distributed_a2a_bytes(n, FP32)   # one per sequence
+        assert real / cplx <= 0.6, (n, real / cplx)
+        # unordered complex transform is cheaper (Z-order output, 2 moves)
+        assert fft_distributed_a2a_bytes(n, FP32, ordered=False) \
+            < fft_distributed_a2a_bytes(n, FP32)
+
+
+def test_pim_rfft_distributed_rejects_bad_shard_counts(rng):
+    from repro.core.pim import pim_rfft_distributed
+    n = 2 * FOURIERPIM_8.crossbar_rows
+    x = rng.standard_normal(n)
+    for bad in (1, 3):
+        with pytest.raises(ValueError):
+            pim_rfft_distributed(x, x, bad, FOURIERPIM_8, FP32)

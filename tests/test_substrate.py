@@ -293,3 +293,47 @@ def test_train_resume_continues(tmp_path):
          "--batch", "4", "--seq", "32", "--ckpt-dir", str(tmp_path)])
     # resumed run only covers steps 20..30
     assert len(losses2) == 10
+
+
+@pytest.mark.dist
+def test_train_compress_grads_flag_subprocess():
+    """The launch surface for the pod-mesh compressed step (ROADMAP
+    leftover): ``--mesh PxDxM --compress-grads`` trains end-to-end on a
+    2-pod virtual mesh through the int8 error-feedback psum, and the flag
+    without a pod axis is rejected loudly."""
+    from conftest import run_in_subprocess_devices
+    out = run_in_subprocess_devices("""
+import numpy as np
+from repro.launch import train as train_mod
+losses = train_mod.main(["--arch", "qwen3-1.7b", "--smoke", "--steps", "12",
+                         "--batch", "8", "--seq", "32",
+                         "--mesh", "2x2x1", "--compress-grads"])
+assert len(losses) == 12, losses
+assert all(l == l for l in losses), f"NaN loss: {losses}"
+assert losses[-1] < losses[0], losses
+# Data-axis reduction pin: the same global batch over (pod=2, data=1) and
+# (pod=2, data=2) must follow the same trajectory — the per-pod gradient
+# is the intra-pod data MEAN, so splitting a pod's batch across two data
+# shards changes the layout, not the math. Before the data_axis reduction
+# was wired, each data shard applied only its own half-batch gradient and
+# the trajectories diverged.
+losses_d1 = train_mod.main(["--arch", "qwen3-1.7b", "--smoke", "--steps",
+                            "6", "--batch", "8", "--seq", "32",
+                            "--mesh", "2x1x1", "--compress-grads"])
+losses_d2 = train_mod.main(["--arch", "qwen3-1.7b", "--smoke", "--steps",
+                            "6", "--batch", "8", "--seq", "32",
+                            "--mesh", "2x2x1", "--compress-grads"])
+diff = float(np.max(np.abs(np.array(losses_d1) - np.array(losses_d2))))
+assert diff < 1e-3, (losses_d1, losses_d2)
+try:
+    train_mod.main(["--arch", "qwen3-1.7b", "--smoke", "--steps", "1",
+                    "--batch", "4", "--seq", "32",
+                    "--mesh", "2x2", "--compress-grads"])
+except SystemExit:
+    pass
+else:
+    raise AssertionError("--compress-grads without a pod axis should error")
+print("OK", round(losses[0], 3), "->", round(losses[-1], 3),
+      "dp-diff", diff)
+""", n_devices=4)
+    assert "OK" in out
