@@ -105,6 +105,64 @@ def smoke() -> None:
     print("smoke ok")
 
 
+def serve_engine_smoke(requests: int = 36, max_batch: int = 8) -> dict:
+    """Drive the continuous-batching engine in-process with a mixed
+    (op, n) stream drawn from the op registry — the serve-layer harness
+    check. Returns the record written into BENCH_fourier.json
+    (``serve_p50_ms`` / ``serve_p99_ms`` / per-bucket utilization).
+
+    The op mix is DERIVED from ``repro.launch.ops`` (every local float op),
+    so a registry entry that stops binding breaks this smoke, not just the
+    serve CLI.
+    """
+    import numpy as np
+
+    from benchmarks.runlib import emit
+    from repro.launch import ops as op_registry
+    from repro.launch.engine import ServeEngine
+
+    ops = [s.name for s in op_registry.registry()
+           if not s.uses_modulus_bits and not s.uses_model_shards]
+    ops.append("polymul-real")            # the headline serving op
+    lens = (256, 512)
+    engine = ServeEngine(max_batch=max_batch, max_pending=256)
+    combos = [(op, n) for op in ops for n in lens]
+    for op, n in combos:
+        engine.register(op, n)
+    engine.warmup()
+    rng = np.random.default_rng(0)
+    kept = {}
+    for rid in range(requests):
+        op, n = combos[rid % len(combos)]
+        payload = engine.bound(op, n).random_payload(rng)
+        if (op, n) not in kept:
+            kept[(op, n)] = (rid, payload)
+        engine.submit(op, n, payload, rid=rid)
+    stats = engine.run(requests)
+    assert stats["served"] == requests, stats
+    for (op, n), (rid, payload) in kept.items():
+        engine.bound(op, n).verify(payload, engine.results[rid])
+    lat = stats["latency_ms"]
+    util = {name: round(b["utilization"], 4)
+            for name, b in stats["buckets"].items()}
+    # tail batches must have executed at actual size (the engine asserts
+    # row counts internally; re-assert the trace here so the artifact is
+    # evidence, not trust)
+    for name, b in stats["buckets"].items():
+        assert all(1 <= s <= max_batch for s in b["batch_sizes"]), (name, b)
+    emit(f"smoke/serve_engine/requests={requests}", 0.0,
+         f"buckets={len(stats['buckets'])};p50_ms={lat['p50']:.2f}"
+         f";p99_ms={lat['p99']:.2f}"
+         f";throughput={stats['throughput_per_s']:.1f}")
+    return {
+        "op": "serve-engine", "requests": requests, "max_batch": max_batch,
+        "buckets": len(stats["buckets"]),
+        "serve_p50_ms": lat["p50"], "serve_p99_ms": lat["p99"],
+        "throughput_per_s": stats["throughput_per_s"],
+        "bucket_utilization": util,
+    }
+
+
 REAL_COMPLEX_CYCLE_GATE = 0.65  # per-product simulated-cycle ratio ceiling
 # Distributed real tier: total interconnect bytes (all-to-all + the
 # conjugate-bin ppermute) vs the complex distributed path, per product /
@@ -217,6 +275,13 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
     records.append({"op": "dist-real-bytes", "n": nd, "batch": Bd,
                     "byte_ratio": dist_ratios})
 
+    # Continuous-batching serve engine: mixed-op stream through the op
+    # registry; per-request p50/p99 and bucket utilization land in the
+    # trajectory artifact (no latency gate — shared runners — but a served
+    # shortfall or oracle mismatch fails the smoke).
+    serve_record = serve_engine_smoke()
+    records.append(serve_record)
+
     # Evaluate every gate, record the honest verdicts, and only then
     # assert: the artifact must exist AND tell the truth on a failing run
     # (it is uploaded with if: always() in CI).
@@ -233,6 +298,10 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
         "records": records,
         "real_complex_cycle_ratio": ratios,
         "dist_real_complex_byte_ratio": dist_ratios,
+        "serve": {"p50_ms": serve_record["serve_p50_ms"],
+                  "p99_ms": serve_record["serve_p99_ms"],
+                  "throughput_per_s": serve_record["throughput_per_s"],
+                  "bucket_utilization": serve_record["bucket_utilization"]},
         "gate": {"max_real_complex_cycle_ratio": REAL_COMPLEX_CYCLE_GATE,
                  "max_dist_real_complex_byte_ratio":
                      DIST_REAL_COMPLEX_BYTE_GATE,

@@ -1,13 +1,30 @@
-"""Batched FFT service — the paper's workload as a serving system.
+"""Batched FFT serving — the paper's workload as a serving system.
 
-Requests stream into a queue, are dynamically batched, and executed through
-the Fourier core. Run:  PYTHONPATH=src python examples/serve_fft.py
+Two tiers (docs/serving.md):
+
+* single-op service: one (op, n) bucket, dynamic batching;
+* mixed-op engine: a stream of requests each carrying its own (op, n),
+  shape-bucketed and continuously batched from ONE process, with tail
+  batches at actual size and p50/p99 latency in the stats.
+
+Run:  PYTHONPATH=src python examples/serve_fft.py
 """
 from repro.launch import serve
 
 if __name__ == "__main__":
+    # Single-op: the fused real polymul endpoint.
     stats = serve.main([
-        "--service", "fft", "--op", "polymul",
+        "--service", "fft", "--op", "polymul-real",
         "--n", "2048", "--batch", "64", "--requests", "512",
     ])
     assert stats["served"] == 512
+
+    # Mixed-op continuous batching: three ops x two lengths, one engine.
+    stats = serve.main([
+        "--service", "engine", "--ops", "fft,rfft,polymul-real",
+        "--ns", "1024,2048", "--batch", "16", "--requests", "96",
+    ])
+    assert stats["served"] == 96
+    assert len(stats["buckets"]) == 6
+    for bucket in stats["buckets"].values():
+        assert max(bucket["batch_sizes"]) <= 16   # tails never padded up

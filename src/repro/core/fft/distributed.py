@@ -390,11 +390,20 @@ def _seq_spec(batch_axes: Sequence[str], axis_name: str) -> P:
 
 
 def _checked_shard_map(fn, mesh, *, axis_name, batch_axes, n_args,
-                       n_from, real: bool = False):
+                       n_from, real: bool = False, pad_pairs: bool = False):
     """shard_map ``fn`` over the sequence spec and wrap it with the global
     shape guard — the one place the call-time ``check_four_step_shape``
     lives for every make_sharded_* builder. ``n_from`` maps the first
-    argument to the GLOBAL transform length."""
+    argument to the GLOBAL transform length.
+
+    ``pad_pairs=True`` (the row-pairing real tiers) accepts ODD batches:
+    the tail row gets a zeros partner appended before the shard_map and the
+    extra row is sliced off the result. The Eq.-(10) split/pair algebra is
+    linear, so pairing a real row with zeros recovers that row's spectrum /
+    product exactly — the pad changes no served value. (The pad is applied
+    to the GLOBAL batch; when the batch axis is itself sharded over
+    ``batch_axes``, callers must keep the padded batch divisible as usual.)
+    """
     D = mesh.shape[axis_name]
     spec = _seq_spec(batch_axes, axis_name)
     mapped = shard_map(fn, mesh=mesh, in_specs=(spec,) * n_args,
@@ -402,6 +411,11 @@ def _checked_shard_map(fn, mesh, *, axis_name, batch_axes, n_args,
 
     def wrapped(*args):
         check_four_step_shape(n_from(args[0]), D, real=real)
+        if pad_pairs and args[0].ndim >= 2 and args[0].shape[-2] % 2:
+            b = args[0].shape[-2]
+            pads = [(0, 0)] * (args[0].ndim - 2) + [(0, 1), (0, 0)]
+            args = tuple(jnp.pad(a, pads) for a in args)
+            return mapped(*args)[..., :b, :]
         return mapped(*args)
     return wrapped
 
@@ -451,28 +465,32 @@ def make_sharded_rfft(mesh: jax.sharding.Mesh, *, axis_name: str = "model",
                       ordered: bool = True, backend: str | None = None):
     """jit-able distributed rfft: real (B, n) -> packed complex (B, n/2).
 
-    The batch must stay even per device (rows pair two-for-one), so
-    ``batch_axes`` shards should keep pairs together — the default
-    contiguous-block data sharding does.
+    Rows pair two-for-one per device; an ODD global batch is padded with a
+    zeros partner internally and sliced off the result (``pad_pairs``), so
+    any B >= 1 serves. ``batch_axes`` shards should keep pairs together —
+    the default contiguous-block data sharding does.
     """
     D = mesh.shape[axis_name]
     fn = functools.partial(rfft_distributed, axis_name=axis_name,
                            n_devices=D, ordered=ordered, backend=backend)
     return _checked_shard_map(fn, mesh, axis_name=axis_name,
                               batch_axes=batch_axes, n_args=1,
-                              n_from=lambda x: x.shape[-1], real=ordered)
+                              n_from=lambda x: x.shape[-1], real=ordered,
+                              pad_pairs=True)
 
 
 def make_sharded_irfft(mesh: jax.sharding.Mesh, *, axis_name: str = "model",
                        batch_axes: Sequence[str] = ("data",),
                        ordered: bool = True, backend: str | None = None):
-    """jit-able inverse: packed complex (B, n/2) -> real (B, n)."""
+    """jit-able inverse: packed complex (B, n/2) -> real (B, n); odd
+    batches pad a zeros half-spectrum internally (see ``pad_pairs``)."""
     D = mesh.shape[axis_name]
     fn = functools.partial(irfft_distributed, axis_name=axis_name,
                            n_devices=D, ordered=ordered, backend=backend)
     return _checked_shard_map(fn, mesh, axis_name=axis_name,
                               batch_axes=batch_axes, n_args=1,
-                              n_from=lambda p: 2 * p.shape[-1], real=ordered)
+                              n_from=lambda p: 2 * p.shape[-1], real=ordered,
+                              pad_pairs=True)
 
 
 def make_sharded_polymul_real(mesh: jax.sharding.Mesh, *,
@@ -480,13 +498,16 @@ def make_sharded_polymul_real(mesh: jax.sharding.Mesh, *,
                               batch_axes: Sequence[str] = ("data",),
                               backend: str | None = None):
     """Distributed real circular polymul with the collective-level paired
-    inverse (see ``polymul_real_distributed``)."""
+    inverse (see ``polymul_real_distributed``). ODD global batches are
+    accepted: the tail product pairs with a zeros product internally and
+    the pad row is sliced off the result (``pad_pairs``) — the serve tier
+    no longer needs an even --batch."""
     D = mesh.shape[axis_name]
     fn = functools.partial(polymul_real_distributed, axis_name=axis_name,
                            n_devices=D, backend=backend)
     return _checked_shard_map(fn, mesh, axis_name=axis_name,
                               batch_axes=batch_axes, n_args=2,
-                              n_from=lambda a: a.shape[-1])
+                              n_from=lambda a: a.shape[-1], pad_pairs=True)
 
 
 # ---------------------------------------------------------------------------

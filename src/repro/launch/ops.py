@@ -1,0 +1,490 @@
+"""Unified op-dispatch registry: the one source of op truth for serving.
+
+Every transform endpoint the repo serves — fft / rfft / polymul /
+polymul-real / polymul-mod, including their RNS and distributed
+parameterizations — is described ONCE here as an :class:`OpSpec` and
+resolved into a :class:`BoundOp` (plan + route + jitted batch fn + payload
+conventions) by ``OpSpec.bind``. ``launch/serve.py`` (both the single-op
+``FFTService`` and the continuous-batching ``--service engine``),
+``launch/engine.py``, ``benchmarks/run.py --smoke`` and the serve tests all
+dispatch through this table instead of carrying their own per-op ``if``
+ladders, so adding an endpoint is one ``register_op`` call.
+
+The OpSpec contract (docs/serving.md):
+
+  * ``arity``            — payload operands per request (1 = transform,
+                           2 = product); the engine stacks them host-side.
+  * ``bind(n, ctx)``     — validate the ``(op, n, modulus_bits,
+                           model_shards)`` combination (raising
+                           :class:`OpConfigError`, a ``ValueError``
+                           subclass, with the registry's own message — no
+                           deep ``ValueError`` from three layers down) and
+                           build the executable route: planner plan,
+                           route tag, jitted batch fn, and any NTT/RNS
+                           params or mesh the route needs.
+  * ``warmup`` payload   — zeros of the route's payload dtype, so deploy
+                           warmup compiles the steady-state shape.
+  * ``random_payload``   — the honest traffic generator (complex payloads
+                           for the complex endpoint, big-int coefficients
+                           for RNS, ...) the producers draw from.
+  * ``verify``           — a numpy-oracle check of one served result
+                           (exact ``==`` for the modular routes).
+
+Config knobs that an op does not consume are rejected by ``bind`` (strict
+mode, the CLI single-op path) or stripped by ``OpSpec.narrow`` (the mixed
+engine, where one process-level context feeds ops with different knobs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+
+class OpConfigError(ValueError):
+    """Invalid (op, n, modulus_bits, model_shards) combination, raised at
+    registry-validation time — before any mesh/jit work — with a message
+    that names the offending knob."""
+
+
+@dataclasses.dataclass(frozen=True)
+class OpContext:
+    """Process-level route parameterization shared by every op of a serve
+    process (CLI flags); ``OpSpec.narrow`` strips the knobs an op ignores."""
+    modulus_bits: int | None = None
+    model_shards: int = 1
+
+
+@dataclasses.dataclass
+class BoundOp:
+    """A resolved (op, n, context): everything an executor needs.
+
+    ``fn`` takes the stacked operand arrays (``stack``'s output, one array
+    per operand) at ANY batch size — tail batches run at their actual size;
+    the kernels' ``_fit_block`` clamps the VMEM block instead of padding.
+    """
+    spec: "OpSpec"
+    n: int
+    ctx: OpContext
+    plan: Any                       # core.fft.planner.FFTPlan
+    route: str
+    fn: Callable[..., Any]
+    payload_dtype: Any              # numpy dtype, or object for big ints
+    ntt_params: Any = None
+    rns: Any = None
+    mesh: Any = None
+
+    @property
+    def key(self) -> tuple[str, int]:
+        return (self.spec.name, self.n)
+
+    def stack(self, payloads: Sequence[Any]) -> tuple:
+        """Host-side batch assembly: a list of per-request payloads ->
+        the operand arrays ``fn`` consumes, at the list's actual length."""
+        import jax.numpy as jnp
+        if self.spec.arity == 1:
+            rows = [np.asarray(p, self.payload_dtype) for p in payloads]
+            return (jnp.asarray(np.stack(rows)),)
+        cols = tuple(
+            np.stack([np.asarray(p[i], self.payload_dtype)
+                      for p in payloads])
+            for i in range(self.spec.arity))
+        if self.payload_dtype is object:      # RNS: stays host-side
+            return cols
+        return tuple(jnp.asarray(c) for c in cols)
+
+    def execute(self, payloads: Sequence[Any]):
+        """Dispatch one batch (async where the route is a jitted fn)."""
+        return self.fn(*self.stack(payloads))
+
+    def to_numpy(self, out) -> np.ndarray:
+        """Materialize a dispatched batch (blocks until ready)."""
+        import jax
+        if self.payload_dtype is not object:
+            out = jax.block_until_ready(out)
+        return np.asarray(out)
+
+    def warmup(self, batch: int) -> None:
+        """Compile the route at the steady-state batch (deploy warmup)."""
+        zeros = self.spec.warmup_payload(self, batch)
+        self.to_numpy(self.fn(*zeros))
+
+    def random_payload(self, rng: np.random.Generator):
+        return self.spec.random_payload(self, rng)
+
+    def verify(self, payload, result: np.ndarray) -> None:
+        self.spec.verify(self, payload, result)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """Registry entry: the full contract of one serveable op."""
+    name: str
+    arity: int
+    summary: str
+    uses_modulus_bits: bool
+    uses_model_shards: bool
+    _validate: Callable[["OpSpec", int, OpContext], None]
+    _bind: Callable[["OpSpec", int, OpContext, int], BoundOp]
+    warmup_payload: Callable[[BoundOp, int], tuple]
+    random_payload: Callable[[BoundOp, np.random.Generator], Any]
+    verify: Callable[[BoundOp, Any, np.ndarray], None]
+
+    def validate(self, n: int, ctx: OpContext = OpContext()) -> None:
+        """Raise :class:`OpConfigError` unless (n, ctx) is serveable."""
+        if ctx.modulus_bits is not None and not self.uses_modulus_bits:
+            raise OpConfigError(
+                f"--modulus-bits applies to "
+                f"{', '.join(ops_using('modulus_bits'))}; "
+                f"op {self.name!r} has no modular route")
+        if ctx.model_shards != 1 and not self.uses_model_shards:
+            raise OpConfigError(
+                f"--model-shards applies to "
+                f"{', '.join(ops_using('model_shards'))}; "
+                f"op {self.name!r} has no distributed route")
+        self._validate(self, n, ctx)
+
+    def narrow(self, ctx: OpContext) -> OpContext:
+        """Strip the knobs this op ignores — the mixed engine resolves one
+        process-level context against ops with different routes."""
+        return OpContext(
+            modulus_bits=ctx.modulus_bits if self.uses_modulus_bits else None,
+            model_shards=ctx.model_shards if self.uses_model_shards else 1)
+
+    def bind(self, n: int, ctx: OpContext = OpContext(), *,
+             batch: int = 0, strict: bool = True) -> BoundOp:
+        """Validate and resolve the executable route.
+
+        ``strict=True`` (the single-op CLI path) rejects knobs this op
+        does not consume; ``strict=False`` narrows them away first (the
+        mixed engine's per-bucket bind).
+        """
+        if not strict:
+            ctx = self.narrow(ctx)
+        self.validate(n, ctx)
+        return self._bind(self, n, ctx, batch)
+
+
+_REGISTRY: dict[str, OpSpec] = {}
+
+
+def register_op(**kw) -> OpSpec:
+    spec = OpSpec(**kw)
+    if spec.name in _REGISTRY:
+        raise ValueError(f"op {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def registry() -> tuple[OpSpec, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def op_names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_op(name: str) -> OpSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise OpConfigError(
+            f"unknown op {name!r}; registered: {', '.join(_REGISTRY)}"
+        ) from None
+
+
+def ops_using(knob: str) -> tuple[str, ...]:
+    flag = {"modulus_bits": "uses_modulus_bits",
+            "model_shards": "uses_model_shards"}[knob]
+    return tuple(s.name for s in _REGISTRY.values() if getattr(s, flag))
+
+
+def cli_help() -> str:
+    """--op help text, derived from the registry (the argparse surface must
+    never drift from the dispatch table)."""
+    return "; ".join(f"{s.name}: {s.summary}" for s in _REGISTRY.values())
+
+
+def cli_knob_help(knob: str, base: str) -> str:
+    return f"{base} (applies to: {', '.join(ops_using(knob))})"
+
+
+# ---------------------------------------------------------------------------
+# Shared payload / verification helpers
+# ---------------------------------------------------------------------------
+
+def _rel_err(got: np.ndarray, want: np.ndarray) -> float:
+    scale = max(1.0, float(np.max(np.abs(want))))
+    return float(np.max(np.abs(np.asarray(got) - want))) / scale
+
+
+def _float_verify(want_of: Callable[[np.ndarray], np.ndarray], tol: float,
+                  bound: BoundOp, payload, result: np.ndarray) -> None:
+    want = want_of(payload) if bound.spec.arity == 1 else want_of(*payload)
+    err = _rel_err(result, want)
+    assert err < tol, (f"{bound.spec.name} route {bound.route} diverged "
+                      f"from the numpy oracle: rel err {err:.2e} >= {tol}")
+
+
+def _zeros(bound: BoundOp, batch: int) -> tuple:
+    if bound.payload_dtype is object:
+        z = np.zeros((batch, bound.n), object) + 0   # python-int zeros
+    else:
+        z = np.zeros((batch, bound.n), bound.payload_dtype)
+    return bound.stack([z[i] if bound.spec.arity == 1
+                        else tuple(z[i] for _ in range(bound.spec.arity))
+                        for i in range(batch)])
+
+
+def _cnormal(rng: np.random.Generator, n: int) -> np.ndarray:
+    return (rng.standard_normal(n)
+            + 1j * rng.standard_normal(n)).astype(np.complex64)
+
+
+def _circular_real(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.fft.ifft(np.fft.fft(a) * np.fft.fft(b)).real
+
+
+def _circular_complex(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.fft.ifft(np.fft.fft(a) * np.fft.fft(b))
+
+
+def _no_dist_route(spec: OpSpec, n: int, ctx: OpContext) -> None:
+    pass
+
+
+def _plan_or_config_error(**kw):
+    """Run the planner, lifting its ValueError into the registry's own
+    error type so callers see one failure surface."""
+    from repro.core import fft as fft_core
+    try:
+        return fft_core.plan(**kw)
+    except ValueError as e:
+        raise OpConfigError(str(e)) from e
+
+
+# ---------------------------------------------------------------------------
+# fft — complex transform endpoint
+# ---------------------------------------------------------------------------
+
+def _bind_fft(spec: OpSpec, n: int, ctx: OpContext, batch: int) -> BoundOp:
+    import jax
+    from repro.core import fft as fft_core
+    plan = _plan_or_config_error(n=n, batch=batch)
+    return BoundOp(spec=spec, n=n, ctx=ctx, plan=plan, route="fft",
+                   fn=jax.jit(lambda x: fft_core.fft(x)),
+                   payload_dtype=np.complex64)
+
+
+register_op(
+    name="fft", arity=1,
+    summary="batched complex FFT (local Pallas/XLA tier)",
+    uses_modulus_bits=False, uses_model_shards=False,
+    _validate=_no_dist_route, _bind=_bind_fft,
+    warmup_payload=_zeros,
+    random_payload=lambda b, rng: _cnormal(rng, b.n),
+    verify=functools.partial(_float_verify, np.fft.fft, 1e-3),
+)
+
+
+# ---------------------------------------------------------------------------
+# rfft — real-Hermitian half-spectrum endpoint (two-for-one packed kernel)
+# ---------------------------------------------------------------------------
+
+def _bind_rfft(spec: OpSpec, n: int, ctx: OpContext, batch: int) -> BoundOp:
+    import jax
+    from repro.core import fft as fft_core
+    plan = _plan_or_config_error(n=n, batch=batch, real=True)
+    return BoundOp(spec=spec, n=n, ctx=ctx, plan=plan, route="rfft-real",
+                   fn=jax.jit(lambda x: fft_core.rfft(x)),
+                   payload_dtype=np.float32)
+
+
+register_op(
+    name="rfft", arity=1,
+    summary="real-input half-spectrum FFT (two-for-one Hermitian packing)",
+    uses_modulus_bits=False, uses_model_shards=False,
+    _validate=_no_dist_route, _bind=_bind_rfft,
+    warmup_payload=_zeros,
+    random_payload=lambda b, rng: rng.standard_normal(b.n).astype(np.float32),
+    verify=functools.partial(_float_verify, np.fft.rfft, 1e-3),
+)
+
+
+# ---------------------------------------------------------------------------
+# polymul — complex circular product (three-transform path)
+# ---------------------------------------------------------------------------
+
+def _bind_polymul(spec: OpSpec, n: int, ctx: OpContext, batch: int) -> BoundOp:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import fft as fft_core
+    plan = _plan_or_config_error(n=n, batch=batch)
+    return BoundOp(
+        spec=spec, n=n, ctx=ctx, plan=plan, route="polymul",
+        fn=jax.jit(lambda a, b: fft_core.polymul(
+            a.astype(jnp.complex64), b.astype(jnp.complex64),
+            mode="circular")),
+        payload_dtype=np.complex64)
+
+
+register_op(
+    name="polymul", arity=2,
+    summary="complex circular polynomial product (convolution theorem)",
+    uses_modulus_bits=False, uses_model_shards=False,
+    _validate=_no_dist_route, _bind=_bind_polymul,
+    warmup_payload=_zeros,
+    random_payload=lambda b, rng: (_cnormal(rng, b.n), _cnormal(rng, b.n)),
+    verify=functools.partial(_float_verify, _circular_complex, 1e-3),
+)
+
+
+# ---------------------------------------------------------------------------
+# polymul-real — paired-inverse real product; distributed four-step route
+# with model_shards > 1 (odd batches padded internally, docs/fourier.md)
+# ---------------------------------------------------------------------------
+
+def _validate_polymul_real(spec: OpSpec, n: int, ctx: OpContext) -> None:
+    if ctx.model_shards > 1:
+        _plan_or_config_error(n=n, batch=0, real=True,
+                              model_shards=ctx.model_shards,
+                              force_distributed=True)
+
+
+def _bind_polymul_real(spec: OpSpec, n: int, ctx: OpContext,
+                       batch: int) -> BoundOp:
+    import jax
+    from repro.core import fft as fft_core
+    if ctx.model_shards > 1:
+        from repro.core.fft import distributed as dfft
+        plan = _plan_or_config_error(n=n, batch=batch, real=True,
+                                     model_shards=ctx.model_shards,
+                                     force_distributed=True)
+        mesh = jax.make_mesh((ctx.model_shards,), ("model",))
+        return BoundOp(
+            spec=spec, n=n, ctx=ctx, plan=plan,
+            route="polymul-real-distributed",
+            fn=jax.jit(dfft.make_sharded_polymul_real(mesh, batch_axes=())),
+            payload_dtype=np.float32, mesh=mesh)
+    plan = _plan_or_config_error(n=n, batch=batch, real=True)
+    return BoundOp(
+        spec=spec, n=n, ctx=ctx, plan=plan, route="polymul-real-packed",
+        fn=jax.jit(lambda a, b: fft_core.polymul_real(a, b,
+                                                      mode="circular")),
+        payload_dtype=np.float32)
+
+
+register_op(
+    name="polymul-real", arity=2,
+    summary="real circular product via the paired-inverse Hermitian fast "
+            "path; --model-shards > 1 runs the distributed four-step tier",
+    uses_modulus_bits=False, uses_model_shards=True,
+    _validate=_validate_polymul_real, _bind=_bind_polymul_real,
+    warmup_payload=_zeros,
+    random_payload=lambda b, rng: (
+        rng.standard_normal(b.n).astype(np.float32),
+        rng.standard_normal(b.n).astype(np.float32)),
+    verify=functools.partial(_float_verify, _circular_real, 1e-3),
+)
+
+
+# ---------------------------------------------------------------------------
+# polymul-mod — exact negacyclic product mod (x^n + 1, q); parameterized
+# routes: single-word fused NTT kernel, multi-limb RNS (> 30-bit Q),
+# distributed four-step NTT (model_shards > 1, single-limb only)
+# ---------------------------------------------------------------------------
+
+def _validate_polymul_mod(spec: OpSpec, n: int, ctx: OpContext) -> None:
+    bits = ctx.modulus_bits
+    if bits is not None and bits > 30 and ctx.model_shards > 1:
+        raise OpConfigError(
+            "distributed polymul-mod is single-limb: RNS "
+            "(modulus_bits > 30) shards limbs, not the sequence — drop "
+            "--model-shards or use modulus_bits <= 30")
+    if ctx.model_shards > 1:
+        _plan_or_config_error(n=n, batch=0, exact=True,
+                              model_shards=ctx.model_shards,
+                              force_distributed=True)
+    try:
+        if bits is not None and bits > 30:
+            from repro.core.ntt import RNSParams
+            RNSParams.make(n, modulus_bits=bits)
+        else:
+            from repro.core.ntt import NTTParams
+            NTTParams.make(n, bits=30 if bits is None else bits)
+    except ValueError as e:
+        raise OpConfigError(
+            f"no NTT modulus for n={n}, modulus_bits={bits}: {e}") from e
+
+
+def _bind_polymul_mod(spec: OpSpec, n: int, ctx: OpContext,
+                      batch: int) -> BoundOp:
+    bits = ctx.modulus_bits
+    if ctx.model_shards > 1:
+        import jax
+        from repro.core.ntt import NTTParams
+        from repro.core.ntt import distributed as dntt
+        plan = _plan_or_config_error(n=n, batch=batch, exact=True,
+                                     model_shards=ctx.model_shards,
+                                     force_distributed=True)
+        params = NTTParams.make(n, bits=30 if bits is None else bits)
+        mesh = jax.make_mesh((ctx.model_shards,), ("data",))
+        return BoundOp(
+            spec=spec, n=n, ctx=ctx, plan=plan,
+            route="polymul-mod-distributed",
+            fn=jax.jit(dntt.make_sharded_ntt_polymul(mesh, params)),
+            payload_dtype=np.uint32, ntt_params=params, mesh=mesh)
+    plan = _plan_or_config_error(n=n, batch=batch, exact=True)
+    if bits is not None and bits > 30:
+        from repro.core.ntt import RNSParams, rns_polymul
+        rns = RNSParams.make(n, modulus_bits=bits)
+        return BoundOp(spec=spec, n=n, ctx=ctx, plan=plan,
+                       route="polymul-mod-rns",
+                       fn=functools.partial(rns_polymul, rns=rns),
+                       payload_dtype=object, rns=rns)
+    from repro.core.ntt import NTTParams
+    from repro.kernels import ntt as kntt
+    params = NTTParams.make(n, bits=30 if bits is None else bits)
+    return BoundOp(spec=spec, n=n, ctx=ctx, plan=plan,
+                   route="polymul-mod-single",
+                   fn=functools.partial(kntt.ntt_polymul, params=params),
+                   payload_dtype=np.uint32, ntt_params=params)
+
+
+def _random_mod_payload(bound: BoundOp, rng: np.random.Generator):
+    if bound.rns is not None:
+        from repro.core.ntt.rns import random_poly
+        return (random_poly(rng, bound.n, bound.rns.modulus),
+                random_poly(rng, bound.n, bound.rns.modulus))
+    q = bound.ntt_params.q
+    return (rng.integers(0, q, bound.n).astype(np.uint32),
+            rng.integers(0, q, bound.n).astype(np.uint32))
+
+
+def _verify_mod(bound: BoundOp, payload, result: np.ndarray) -> None:
+    a, b = payload
+    if bound.rns is not None:
+        from repro.core.ntt import rns_polymul_reference
+        want = rns_polymul_reference(np.asarray(a, object),
+                                     np.asarray(b, object), bound.rns)
+    else:
+        from repro.core.ntt import negacyclic_polymul
+        want = negacyclic_polymul(np.asarray(a), np.asarray(b),
+                                  bound.ntt_params)
+    assert (np.asarray(result) == want).all(), \
+        f"{bound.route} is not bit-exact against the reference NTT"
+
+
+register_op(
+    name="polymul-mod", arity=2,
+    summary="exact negacyclic product mod (x^n+1, q); --modulus-bits > 30 "
+            "routes through multi-limb RNS/CRT, --model-shards > 1 the "
+            "distributed four-step NTT",
+    uses_modulus_bits=True, uses_model_shards=True,
+    _validate=_validate_polymul_mod, _bind=_bind_polymul_mod,
+    warmup_payload=_zeros,
+    random_payload=_random_mod_payload,
+    verify=_verify_mod,
+)

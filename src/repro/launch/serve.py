@@ -1,15 +1,23 @@
 """Serving drivers.
 
---service fft  : batched FFT / polynomial-multiplication service — the
-                 paper's actual workload (batched transforms at maximum
-                 throughput). Requests arrive on a queue, are batched to
-                 the configured batch size, executed through the Fourier
-                 core (Pallas on TPU / XLA path on CPU), and throughput is
-                 reported. This is deliverable (b)'s end-to-end serve
-                 driver for the paper's kind (a compute-primitive paper).
+--service fft    : single-op batched transform service. The op, its route
+                   (local / RNS / distributed), payload dtype, warmup
+                   shape, traffic generator and result verifier all come
+                   from the op-dispatch registry (``launch/ops.py``) — the
+                   same table the continuous-batching engine, benchmarks
+                   and tests dispatch through.
 
---service lm   : batched greedy decode for any --arch (reduced with
-                 --smoke): prefill then token-by-token decode_step.
+--service engine : multiplexing continuous-batching engine
+                   (``launch/engine.py``): a mixed stream of requests,
+                   each with its own (op, n), is shape-bucketed and served
+                   from ONE process with tail batches at actual size,
+                   deferred device sync (next batch transfers while the
+                   current one computes), bounded-queue backpressure, and
+                   per-request p50/p99 latency reported alongside
+                   throughput (docs/serving.md).
+
+--service lm     : batched greedy decode for any --arch (reduced with
+                   --smoke): prefill then token-by-token decode_step.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --service fft --n 1024 \
@@ -24,21 +32,18 @@ Example:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --service fft --n 1024 --batch 4 \
       --requests 16 --op polymul-mod --model-shards 8
-  # real-signal half-spectrum transforms (two-for-one packed kernel):
-  PYTHONPATH=src python -m repro.launch.serve --service fft --n 1024 \
-      --batch 64 --requests 256 --op rfft
-  # distributed real tier (four-step packed FFT, per-shard Hermitian split):
+  # mixed-op continuous batching: one engine, four ops, two lengths,
+  # the polymul-real / polymul-mod buckets on the distributed tier:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
-      python -m repro.launch.serve --service fft --n 1024 --batch 4 \
-      --requests 16 --op polymul-real --model-shards 8
+      python -m repro.launch.serve --service engine \
+      --ops fft,rfft,polymul-real,polymul-mod --ns 512,1024 \
+      --model-shards 8 --batch 8 --requests 64
   PYTHONPATH=src python -m repro.launch.serve --service lm \
       --arch qwen3-1.7b --smoke --prompt-len 32 --gen 32
 """
 from __future__ import annotations
 
 import argparse
-import functools
-import queue
 import threading
 import time
 
@@ -47,38 +52,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core import fft as fft_core
+from repro.launch import ops as op_registry
+from repro.launch.engine import ServeEngine
 from repro.models import lm
 
 
 # ---------------------------------------------------------------------------
-# FFT service
+# FFT service (single-op): a thin wrapper over the registry + engine
 # ---------------------------------------------------------------------------
 
 class FFTService:
-    """Batched transform service with a request queue and a worker loop.
+    """Single-op transform service: one registry bucket on the engine.
 
-    ``op='polymul-real'`` is the paper's headline serving workload —
-    real-coefficient products — routed through the real-Hermitian fast path
-    (``fft_core.polymul_real``: two-for-one packed forward, paired
-    inverse); ``self.plan`` records the planner's real-tier selection so
-    tests can assert the route, not just the values. ``op='rfft'`` serves
-    half-spectrum transforms of real signals the same way. With
-    ``model_shards > 1``, ``polymul-real`` dispatches the DISTRIBUTED real
-    tier (``core.fft.distributed.make_sharded_polymul_real``): sequence
-    sharded over a ``model`` mesh axis, Hermitian split per shard, paired
-    inverse at the collective level — ~0.58x the complex distributed
-    path's interconnect bytes.
-
-    ``op='polymul'`` is the complex endpoint (payloads are cast to
-    complex64 — real requests belong on ``polymul-real``).
-
-    ``op='polymul-mod'`` is the exact modular endpoint (paper §5's crypto
-    motivation): negacyclic products mod (x^n + 1, q) through the fused
-    NTT kernel — bit-exact, so results can feed an RLWE/FHE pipeline.
-    With ``model_shards > 1`` it dispatches the distributed four-step NTT
-    (``core.ntt.distributed``) over a ``data`` mesh axis of that many
-    devices — the serve endpoint for the planner's distributed exact tier.
+    All op dispatch — route selection (local packed / RNS / distributed),
+    payload dtype, warmup shape — flows through ``launch/ops.py``; this
+    class only pins ONE (op, n) bucket and keeps the legacy surface
+    (``plan``/``route``/``_fn``/``ntt_params``/``rns``/``mesh``) that
+    tests and callers assert against. Invalid combinations (RNS +
+    model_shards, unknown knobs, non-tileable shapes) raise
+    :class:`~repro.launch.ops.OpConfigError` from the registry's own
+    validation, here at construction.
     """
 
     def __init__(self, n: int, batch: int, op: str = "fft",
@@ -86,173 +79,30 @@ class FFTService:
         self.n = n
         self.batch = batch
         self.op = op
-        self.ntt_params = None
-        self.rns = None
-        self.mesh = None
-        self.plan = None
-        self.route = op
-        self.q: queue.Queue = queue.Queue()
-        self.results: dict[int, np.ndarray] = {}
-        self.done = threading.Event()
-        if op == "fft":
-            self.plan = fft_core.plan(n, batch)
-            self._fn = jax.jit(lambda x: fft_core.fft(x))
-        elif op == "rfft":
-            self.plan = fft_core.plan(n, batch, real=True)
-            self.route = "rfft-real"
-            self._fn = jax.jit(lambda x: fft_core.rfft(x))
-        elif op == "polymul":
-            self.plan = fft_core.plan(n, batch)
-            self._fn = jax.jit(lambda a, b: fft_core.polymul(
-                a.astype(jnp.complex64), b.astype(jnp.complex64),
-                mode="circular"))
-        elif op == "polymul-real" and model_shards > 1:
-            from repro.core.fft import distributed as dfft
-            if batch % 2:
-                raise ValueError("distributed polymul-real pairs products "
-                                 f"for the shared inverse; --batch must be "
-                                 f"even, got {batch}")
-            # An explicit --model-shards request pins the distributed real
-            # tier even where the planner's policy would keep a short
-            # sequence local; ``force_distributed`` makes the planner
-            # validate the shape and emit the plan actually executed.
-            self.plan = fft_core.plan(n, batch, real=True,
-                                      model_shards=model_shards,
-                                      force_distributed=True)
-            self.route = "polymul-real-distributed"
-            self.mesh = jax.make_mesh((model_shards,), ("model",))
-            self._fn = jax.jit(dfft.make_sharded_polymul_real(
-                self.mesh, batch_axes=()))
-        elif op == "polymul-real":
-            self.plan = fft_core.plan(n, batch, real=True)
-            self.route = "polymul-real-packed"
-            self._fn = jax.jit(lambda a, b: fft_core.polymul_real(
-                a, b, mode="circular"))
-        elif op == "polymul-mod" and model_shards > 1:
-            if modulus_bits is not None and modulus_bits > 30:
-                raise ValueError("distributed polymul-mod is single-limb: "
-                                 "RNS (modulus_bits > 30) shards limbs, not "
-                                 "the sequence")
-            from repro.core.ntt import NTTParams
-            from repro.core.ntt import distributed as dntt
-            # An explicit --model-shards request pins the distributed tier
-            # even where the planner's policy would keep a short sequence
-            # local; the planner emits the plan actually executed.
-            self.plan = fft_core.plan(n, batch, exact=True,
-                                      model_shards=model_shards,
-                                      force_distributed=True)
-            self.route = "polymul-mod-distributed"
-            self.ntt_params = NTTParams.make(
-                n, bits=30 if modulus_bits is None else modulus_bits)
-            self.mesh = jax.make_mesh((model_shards,), ("data",))
-            self._fn = jax.jit(dntt.make_sharded_ntt_polymul(
-                self.mesh, self.ntt_params))
-        elif op == "polymul-mod":
-            self.plan = fft_core.plan(n, batch, exact=True)
-            # ``modulus_bits`` is the request-level knob: single-word q
-            # (< 2^31) stays on the fused uint32 kernel; anything wider
-            # routes through the RNS layer, which picks the limb count to
-            # cover Q and runs all limbs in ONE kernel launch.
-            if modulus_bits is not None and modulus_bits > 30:
-                from repro.core.ntt import RNSParams
-                self.rns = RNSParams.make(n, modulus_bits=modulus_bits)
-                from repro.core.ntt import rns_polymul
-                self._fn = functools.partial(rns_polymul, rns=self.rns)
-            else:
-                from repro.core.ntt import NTTParams
-                from repro.kernels import ntt as kntt
-                # <= 30 bits stays single-word and HONORS the request:
-                # choose_modulus validates the width against n and picks
-                # the largest q < 2^modulus_bits (default 30).
-                self.ntt_params = NTTParams.make(
-                    n, bits=30 if modulus_bits is None else modulus_bits)
-                self._fn = functools.partial(kntt.ntt_polymul,
-                                             params=self.ntt_params)
-        else:
-            raise ValueError(op)
+        self.engine = ServeEngine(max_batch=batch,
+                                  modulus_bits=modulus_bits,
+                                  model_shards=model_shards)
+        # strict: knobs the op does not consume are config errors, not
+        # silently ignored flags
+        self.bound = self.engine.register(op, n, strict=True)
+        self.plan = self.bound.plan
+        self.route = self.bound.route
+        self._fn = self.bound.fn
+        self.ntt_params = self.bound.ntt_params
+        self.rns = self.bound.rns
+        self.mesh = self.bound.mesh
+        self.results = self.engine.results
 
     def warmup(self) -> None:
         """Compile the batch function before serving (deploy-time warmup):
         the reported throughput is steady-state, not trace+compile."""
-        n, batch = self.n, self.batch
-        if self.op == "fft":
-            jax.block_until_ready(self._fn(jnp.zeros((batch, n),
-                                                     jnp.complex64)))
-        elif self.op == "rfft":
-            jax.block_until_ready(self._fn(jnp.zeros((batch, n),
-                                                     jnp.float32)))
-        elif self.rns is not None:
-            z = np.zeros((batch, n), object)
-            z += 0   # python-int zeros, as the RNS route receives
-            self._fn(z, z)
-        elif self.op == "polymul-mod":
-            z = jnp.zeros((batch, n), jnp.uint32)
-            jax.block_until_ready(self._fn(z, z))
-        elif self.op == "polymul":
-            z = jnp.zeros((batch, n), jnp.complex64)   # the payload dtype
-            jax.block_until_ready(self._fn(z, z))
-        else:
-            z = jnp.zeros((batch, n), jnp.float32)
-            jax.block_until_ready(self._fn(z, z))
+        self.engine.warmup()
 
     def submit(self, req_id: int, payload):
-        self.q.put((req_id, payload))
-
-    def _collect(self, timeout=0.05):
-        items = []
-        deadline = time.time() + timeout
-        while len(items) < self.batch and time.time() < deadline:
-            try:
-                items.append(self.q.get(timeout=max(
-                    0.0, deadline - time.time())))
-            except queue.Empty:
-                break
-        return items
+        self.engine.submit(self.op, self.n, payload, rid=req_id)
 
     def run(self, total_requests: int) -> dict:
-        served = 0
-        t0 = time.time()
-        batches = 0
-        compute_s = 0.0
-        while served < total_requests:
-            items = self._collect()
-            if not items:
-                continue
-            ids = [i for i, _ in items]
-            pay = [p for _, p in items]
-            # pad the tail batch
-            while len(pay) < self.batch:
-                pay.append(pay[-1])
-            t_c = time.time()
-            if self.op == "fft":
-                x = jnp.asarray(np.stack(pay)).astype(jnp.complex64)
-                out = np.asarray(self._fn(x))
-            elif self.op == "rfft":
-                x = jnp.asarray(np.stack(pay)).astype(jnp.float32)
-                out = np.asarray(self._fn(x))
-            elif self.rns is not None:
-                # Big-Q coefficients are python ints (object dtype): the RNS
-                # route splits to per-limb uint32 residues host-side, runs
-                # the limb-batched kernel, and CRT-reconstructs mod Q.
-                a = np.stack([np.asarray(p[0], object) for p in pay])
-                b = np.stack([np.asarray(p[1], object) for p in pay])
-                out = self._fn(a, b)
-            else:
-                a = jnp.asarray(np.stack([p[0] for p in pay]))
-                b = jnp.asarray(np.stack([p[1] for p in pay]))
-                out = np.asarray(self._fn(a, b))
-            compute_s += time.time() - t_c
-            for j, rid in enumerate(ids):
-                self.results[rid] = out[j]
-            served += len(ids)
-            batches += 1
-        dt = time.time() - t0
-        return {"served": served, "batches": batches, "seconds": dt,
-                "throughput_per_s": served / dt,
-                # compute-only rate: excludes queue collection waits, so
-                # endpoint comparisons reflect the kernels, not the driver
-                "compute_seconds": compute_s,
-                "compute_throughput_per_s": served / max(compute_s, 1e-9)}
+        return self.engine.run(total_requests)
 
 
 def run_fft_service(args) -> dict:
@@ -261,53 +111,90 @@ def run_fft_service(args) -> dict:
                      modulus_bits=args.modulus_bits,
                      model_shards=args.model_shards)
     svc.warmup()
+    first: dict[int, object] = {}
 
     def producer():
         for rid in range(args.requests):
-            if args.op == "fft":
-                payload = (rng.standard_normal(args.n)
-                           + 1j * rng.standard_normal(args.n))
-            elif args.op == "rfft":
-                payload = rng.standard_normal(args.n).astype(np.float32)
-            elif args.op == "polymul":
-                # The complex endpoint gets genuinely complex payloads:
-                # zero-imag inputs would let XLA strip half the butterflies
-                # at compile time and misrepresent the endpoint's cost
-                # (real requests belong on polymul-real).
-                payload = (
-                    (rng.standard_normal(args.n)
-                     + 1j * rng.standard_normal(args.n)).astype(np.complex64),
-                    (rng.standard_normal(args.n)
-                     + 1j * rng.standard_normal(args.n)).astype(np.complex64))
-            elif args.op == "polymul-mod" and svc.rns is not None:
-                from repro.core.ntt.rns import random_poly
-                payload = (random_poly(rng, args.n, svc.rns.modulus),
-                           random_poly(rng, args.n, svc.rns.modulus))
-            elif args.op == "polymul-mod":
-                q = svc.ntt_params.q
-                payload = (rng.integers(0, q, args.n).astype(np.uint32),
-                           rng.integers(0, q, args.n).astype(np.uint32))
-            else:
-                payload = (rng.standard_normal(args.n).astype(np.float32),
-                           rng.standard_normal(args.n).astype(np.float32))
+            payload = svc.bound.random_payload(rng)
+            if rid == 0:
+                first[rid] = payload
             svc.submit(rid, payload)
 
     th = threading.Thread(target=producer, daemon=True)
     th.start()
     stats = svc.run(args.requests)
     th.join()
-    # verify one result against numpy
-    rid = 0
-    if args.op == "fft":
-        pass  # payload not retained; correctness covered by kernel tests
+    # verify one served result against the registry's numpy oracle
+    if first:
+        svc.bound.verify(first[0], svc.results[0])
     limbs = f" limbs={svc.rns.k} Q~2^{svc.rns.modulus.bit_length()}" \
         if svc.rns is not None else ""
+    lat = stats["latency_ms"]
     print(f"[serve:fft] op={args.op}{limbs} route={svc.route} n={args.n} "
           f"batch={args.batch} served={stats['served']} in "
           f"{stats['seconds']:.2f}s "
           f"-> {stats['throughput_per_s']:.1f} req/s "
           f"(compute-only {stats['compute_throughput_per_s']:.1f} req/s) "
+          f"p50={lat['p50']:.2f}ms p99={lat['p99']:.2f}ms "
           f"[{svc.plan.describe()}]")
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Mixed-op continuous-batching engine service
+# ---------------------------------------------------------------------------
+
+def run_engine_service(args) -> dict:
+    """Serve a mixed (op, n) stream from one engine process.
+
+    Buckets come from the cross product of ``--ops`` and ``--ns``; the
+    process-level ``--modulus-bits`` / ``--model-shards`` context is
+    narrowed per op (ops without that route stay local), so one engine can
+    serve local fft next to the distributed polymul-mod tier. One result
+    per bucket is verified against the registry's numpy oracle after the
+    drain.
+    """
+    ops = [s.strip() for s in args.ops.split(",") if s.strip()]
+    ns = [int(s) for s in args.ns.split(",") if s.strip()]
+    engine = ServeEngine(max_batch=args.batch, max_pending=args.max_pending,
+                         modulus_bits=args.modulus_bits,
+                         model_shards=args.model_shards)
+    for op in ops:
+        for n in ns:
+            engine.register(op, n)
+    engine.warmup()
+
+    rng = np.random.default_rng(0)
+    combos = [(op, n) for op in ops for n in ns]
+    kept: dict[tuple[str, int], tuple[int, object]] = {}
+
+    def producer():
+        for rid in range(args.requests):
+            op, n = combos[rid % len(combos)]
+            payload = engine.bound(op, n).random_payload(rng)
+            if (op, n) not in kept:
+                kept[(op, n)] = (rid, payload)
+            engine.submit(op, n, payload, rid=rid)
+
+    th = threading.Thread(target=producer, daemon=True)
+    th.start()
+    stats = engine.run(args.requests)
+    th.join()
+    for (op, n), (rid, payload) in kept.items():
+        engine.bound(op, n).verify(payload, engine.results[rid])
+
+    lat = stats["latency_ms"]
+    print(f"[serve:engine] buckets={len(stats['buckets'])} "
+          f"served={stats['served']} in {stats['seconds']:.2f}s "
+          f"-> {stats['throughput_per_s']:.1f} req/s "
+          f"(compute-only {stats['compute_throughput_per_s']:.1f} req/s) "
+          f"p50={lat['p50']:.2f}ms p90={lat['p90']:.2f}ms "
+          f"p99={lat['p99']:.2f}ms")
+    for name, b in stats["buckets"].items():
+        print(f"[serve:engine]   {name} route={b['route']} "
+              f"served={b['served']} batches={b['batches']} "
+              f"mean_batch={b['mean_batch']:.1f} "
+              f"utilization={b['utilization']:.2f}")
     return stats
 
 
@@ -344,31 +231,52 @@ def run_lm_service(args) -> dict:
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--service", choices=["fft", "lm"], default="fft")
+    ap.add_argument("--service", choices=["fft", "engine", "lm"],
+                    default="fft")
     ap.add_argument("--n", type=int, default=1024)
-    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=32,
+                    help="single-op batch / engine continuous-batching "
+                         "block cap (tail batches run at actual size)")
     ap.add_argument("--requests", type=int, default=256)
-    ap.add_argument("--op", default="fft",
-                    choices=["fft", "rfft", "polymul", "polymul-real",
-                             "polymul-mod"])
+    # the op surface is DERIVED from the registry: choices, help and
+    # knob applicability can never drift from the dispatch table
+    ap.add_argument("--op", default="fft", choices=op_registry.op_names(),
+                    help=op_registry.cli_help())
+    ap.add_argument("--ops", default="fft,rfft,polymul-real",
+                    help="engine service: comma-separated op mix "
+                         f"(choices: {', '.join(op_registry.op_names())})")
+    ap.add_argument("--ns", default=None,
+                    help="engine service: comma-separated sequence "
+                         "lengths (default: --n)")
+    ap.add_argument("--max-pending", type=int, default=1024,
+                    help="engine service: bounded admission queue — "
+                         "producers block (backpressure) when full")
     ap.add_argument("--modulus-bits", type=int, default=None,
-                    help="polymul-mod target modulus width; > 30 routes "
-                         "through the multi-limb RNS/CRT layer (limb count "
-                         "chosen to cover Q, docs/ntt.md)")
+                    help=op_registry.cli_knob_help(
+                        "modulus_bits",
+                        "target modulus width; > 30 routes through the "
+                        "multi-limb RNS/CRT layer (docs/ntt.md)"))
     ap.add_argument("--model-shards", type=int, default=1,
-                    help="polymul-mod / polymul-real: shard the sequence "
-                         "over this many devices via the distributed "
-                         "four-step NTT (core/ntt/distributed.py) or the "
-                         "real-Hermitian four-step FFT "
-                         "(core/fft/distributed.py) — the serve endpoints "
-                         "for the planner's distributed tiers")
+                    help=op_registry.cli_knob_help(
+                        "model_shards",
+                        "shard the sequence over this many devices via "
+                        "the distributed four-step NTT/FFT tiers"))
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     args = ap.parse_args(argv)
-    if args.service == "fft":
-        return run_fft_service(args)
+    if args.ns is None:
+        args.ns = str(args.n)
+    try:
+        if args.service == "fft":
+            return run_fft_service(args)
+        if args.service == "engine":
+            return run_engine_service(args)
+    except op_registry.OpConfigError as e:
+        # the registry's own validation message, as a clean CLI exit
+        # instead of a deep traceback
+        ap.error(str(e))
     return run_lm_service(args)
 
 
