@@ -172,7 +172,13 @@ DIST_REAL_COMPLEX_BYTE_GATE = 0.6
 
 
 def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
-    """Emit the real-path perf record + gate; returns the written dict."""
+    """Emit the real-path perf record + gate; returns the written dict.
+
+    The committed ``path`` (if present) is the perf-trajectory BASELINE:
+    every deterministic metric is ratcheted against it through
+    ``benchmarks/trajectory.py`` — a regression within the absolute gates
+    still fails — and a history record is appended, so the artifact
+    carries the measured trajectory, not just the latest snapshot."""
     import json
 
     import numpy as np
@@ -285,6 +291,12 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
     # Evaluate every gate, record the honest verdicts, and only then
     # assert: the artifact must exist AND tell the truth on a failing run
     # (it is uploaded with if: always() in CI).
+    from benchmarks import trajectory
+    baseline = trajectory.load(path)
+    fresh = {"real_complex_cycle_ratio": ratios,
+             "dist_real_complex_byte_ratio": dist_ratios,
+             "records": records}
+    violations = trajectory.compare(baseline, fresh) if baseline else []
     cycle_ok = all(r <= REAL_COMPLEX_CYCLE_GATE for r in ratios.values())
     bytes_ok = all(r <= DIST_REAL_COMPLEX_BYTE_GATE
                    for r in dist_ratios.values())
@@ -308,11 +320,18 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
                  "cycle_ratio_pass": cycle_ok,
                  "dist_byte_ratio_pass": bytes_ok,
                  "wallclock_pass": wallclock_ok,
-                 "pass": cycle_ok and bytes_ok and wallclock_ok},
+                 "ratchet_slack": trajectory.RATCHET_SLACK,
+                 "trajectory_pass": not violations,
+                 "trajectory_violations": violations,
+                 "pass": (cycle_ok and bytes_ok and wallclock_ok
+                          and not violations)},
     }
+    out["history"] = trajectory.extend_history(baseline, out)
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
-    emit("smoke/bench_fourier_json", 0.0, f"path={path}")
+    emit("smoke/bench_fourier_json", 0.0,
+         f"path={path};history={len(out['history'])}"
+         f";ratchet={'armed' if baseline else 'unarmed'}")
     assert cycle_ok, \
         f"real/complex polymul cycle ratio regressed: {ratios}"
     assert bytes_ok, \
@@ -320,6 +339,9 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
     assert wallclock_ok, \
         f"real path grossly slower than complex in interpret mode: " \
         f"{us_real:.0f}us vs {us_cplx:.0f}us"
+    assert not violations, \
+        "perf trajectory ratchet violated vs the committed " \
+        f"BENCH_fourier.json baseline:\n  " + "\n  ".join(violations)
     return out
 
 

@@ -61,9 +61,21 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
-    os.replace(tmp, final) if not os.path.exists(final) else None
-    if os.path.exists(final) and os.path.exists(tmp):
-        shutil.rmtree(tmp)
+    if os.path.exists(final):
+        # Re-saving an existing step must land the FRESH arrays. os.replace
+        # cannot atomically replace a non-empty directory, so the old step
+        # is first moved aside under a .tmp suffix (which _retain GCs like
+        # any crashed partial write) and removed only after the rename. A
+        # crash between the two renames leaves no step_N listed — never a
+        # stale one masquerading as the new save.
+        old = final + ".old.tmp"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.replace(final, old)
+        os.replace(tmp, final)
+        shutil.rmtree(old, ignore_errors=True)
+    else:
+        os.replace(tmp, final)
     _retain(ckpt_dir, keep)
     return final
 
@@ -95,6 +107,19 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """The saved manifest (tree paths/shapes/dtypes + the ``extra`` payload
+    callers stash host-side state in: watchdog EWMA/events, data-pipeline
+    step cursor, engine bucket config — docs/fault_tolerance.md)."""
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        return json.load(f)
+
+
+def read_extra(ckpt_dir: str, step: int) -> dict:
+    return read_manifest(ckpt_dir, step).get("extra", {})
+
+
 def restore(ckpt_dir: str, step: int, like: Any,
             shardings: Any = None) -> Any:
     """Restore into the structure of ``like``; if ``shardings`` is given the
@@ -112,6 +137,13 @@ def restore(ckpt_dir: str, step: int, like: Any,
         sh_leaves = dict(sh_flat)
     out = []
     for key, leaf in leaves:
+        if key not in by_key:
+            raise KeyError(
+                f"checkpoint {final} has no array for {key!r} — the saved "
+                f"payload does not match the restore tree (e.g. resuming "
+                f"--compress-grads from a checkpoint saved without the "
+                f"grad_err residual); saved keys: "
+                f"{sorted(by_key)[:8]}...")
         arr = by_key[key]
         want_dtype = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
         arr = arr.astype(want_dtype)

@@ -27,9 +27,11 @@ class WatchdogConfig:
 
 
 class StepWatchdog:
-    def __init__(self, cfg: WatchdogConfig = WatchdogConfig(),
+    def __init__(self, cfg: Optional[WatchdogConfig] = None,
                  on_evict: Optional[Callable[[int], None]] = None):
-        self.cfg = cfg
+        # None sentinel: a dataclass default here would be evaluated ONCE at
+        # class-definition time and shared (mutably) by every watchdog.
+        self.cfg = WatchdogConfig() if cfg is None else cfg
         self.on_evict = on_evict
         self.ewma: Optional[float] = None
         self.seen = 0
@@ -46,6 +48,22 @@ class StepWatchdog:
         dt = time.perf_counter() - self._t0
         self._t0 = None
         return self.observe(step, dt)
+
+    # -- checkpointable state (manifest ``extra``, json-serializable) -------
+
+    def state_dict(self) -> dict:
+        """EWMA/flag/event state for the checkpoint manifest: a resumed run
+        keeps its timing baseline instead of re-warming and re-learning it
+        (and keeps the straggler event log across preemptions)."""
+        return {"ewma": self.ewma, "seen": self.seen,
+                "consecutive_flags": self.consecutive_flags,
+                "events": list(self.events)}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.ewma = state.get("ewma")
+        self.seen = int(state.get("seen", 0))
+        self.consecutive_flags = int(state.get("consecutive_flags", 0))
+        self.events = list(state.get("events", []))
 
     def observe(self, step: int, dt: float) -> bool:
         """Pure observation API (used by tests with synthetic timings)."""

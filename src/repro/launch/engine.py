@@ -29,6 +29,19 @@ Metrics (docs/serving.md has the glossary): per-request latency
 busy-only throughput, and per-bucket batch-size traces with utilization
 (mean dispatched batch / block cap) — the number that says whether traffic
 actually fills the arrays the paper's throughput claims assume.
+
+Fault tolerance (docs/fault_tolerance.md): the engine is preemption-safe.
+``request_stop`` (the SIGTERM path in ``launch/serve.py``) stops admission
+and lets ``run`` DRAIN — every already-admitted request is dispatched,
+resolved and delivered before ``run`` returns; ``snapshot`` then persists
+the lifetime stats, bucket config and watchdog state through
+``ft.checkpoint`` (atomic step dirs), and ``ServeEngine.from_snapshot``
+warm-restarts: buckets re-register and re-bind on the CURRENT context —
+which may have a different ``model_shards`` — while served counters, the
+latency record and the watchdog's timing baseline carry over. A
+:class:`~repro.ft.watchdog.StepWatchdog` observes per-batch service times;
+its ``on_evict`` hook is the elastic trigger the watchdog module
+documents (checkpoint -> resize -> restore).
 """
 from __future__ import annotations
 
@@ -36,15 +49,23 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Any
+from typing import Any, Callable, Optional
 
 import numpy as np
 
+from repro.ft import checkpoint as ckpt_lib
+from repro.ft.watchdog import StepWatchdog, WatchdogConfig
 from repro.launch import ops as op_registry
+
+SNAPSHOT_SCHEMA = "serve_engine_snapshot/v1"
 
 
 class Backpressure(RuntimeError):
     """Admission rejected: the bounded request queue is full."""
+
+
+class EngineStopped(RuntimeError):
+    """Admission rejected: the engine is draining toward a stop/snapshot."""
 
 
 @dataclasses.dataclass
@@ -75,7 +96,10 @@ class ServeEngine:
 
     def __init__(self, *, max_batch: int = 64, max_pending: int = 1024,
                  modulus_bits: int | None = None, model_shards: int = 1,
-                 collect_timeout_s: float = 0.05):
+                 collect_timeout_s: float = 0.05,
+                 watchdog_cfg: Optional[WatchdogConfig] = None,
+                 on_evict: Optional[Callable[["ServeEngine", int], None]]
+                 = None):
         if max_batch < 1:
             raise ValueError(f"max_batch={max_batch} must be >= 1")
         if max_pending < 1:
@@ -86,15 +110,39 @@ class ServeEngine:
         self.ctx = op_registry.OpContext(modulus_bits=modulus_bits,
                                          model_shards=model_shards)
         self._bound: dict[tuple[str, int], op_registry.BoundOp] = {}
-        self._buckets: dict[tuple[str, int], deque[_Request]] = {}
+        self._strict: dict[tuple[str, int], bool] = {}
         self._bucket_stats: dict[tuple[str, int], _BucketStats] = {}
+        self._buckets: dict[tuple[str, int], deque[_Request]] = {}
         self._bind_lock = threading.Lock()
         self._cv = threading.Condition()
         self._pending = 0
         self._served = 0
         self._next_rid = 0
+        self._stopping = False
         self.results: dict[int, np.ndarray] = {}
         self._latencies_s: list[float] = []
+        # Warm-restart carry-over (``from_snapshot`` fills these): lifetime
+        # counters from before the restart, so the trajectory a deployment
+        # reports survives preemption instead of resetting to zero.
+        self.restarts = 0
+        self._prev_served = 0
+        self._prev_batches = 0
+        self._prev_bucket_served: dict[str, int] = {}
+        self._prev_latencies_s: list[float] = []
+        # Straggler watchdog over per-batch service times (dispatch ->
+        # materialized); ``on_evict(engine, batch_idx)`` is the elastic
+        # hook — the driver checkpoints, resizes the mesh and warm-restarts
+        # (``elastic_restart``). Default: record the event.
+        self.evictions: list[int] = []
+        self._user_on_evict = on_evict
+        self.watchdog = StepWatchdog(watchdog_cfg,
+                                     on_evict=self._handle_evict)
+        self._batch_idx = 0
+
+    def _handle_evict(self, batch_idx: int) -> None:
+        self.evictions.append(batch_idx)
+        if self._user_on_evict is not None:
+            self._user_on_evict(self, batch_idx)
 
     # -- registration -------------------------------------------------------
 
@@ -112,6 +160,7 @@ class ServeEngine:
                 bound = spec.bind(n, self.ctx, batch=self.max_batch,
                                   strict=strict)
                 self._bound[key] = bound
+                self._strict[key] = strict
                 self._buckets[key] = deque()
                 self._bucket_stats[key] = _BucketStats()
             return self._bound[key]
@@ -134,10 +183,18 @@ class ServeEngine:
         Blocks while the bounded queue is full (``block=False`` raises
         :class:`Backpressure` instead — the caller's cue to shed load).
         """
+        if self._stopping:
+            raise EngineStopped(
+                "engine is draining (request_stop/SIGTERM); submit after "
+                "the warm restart")
         bound = self.register(op, n)     # validates shape/route once
         deadline = None if timeout is None else time.perf_counter() + timeout
         with self._cv:
             while self._pending >= self.max_pending:
+                if self._stopping:
+                    raise EngineStopped(
+                        "engine is draining (request_stop/SIGTERM); "
+                        "submit after the warm restart")
                 if not block:
                     raise Backpressure(
                         f"queue full ({self._pending}/{self.max_pending} "
@@ -202,42 +259,70 @@ class ServeEngine:
 
     # -- the serve loop -----------------------------------------------------
 
+    def request_stop(self) -> None:
+        """SIGTERM path: stop ADMITTING (submit raises
+        :class:`EngineStopped`) but keep serving — ``run`` drains every
+        already-admitted request, resolves the in-flight batch, and
+        returns. The caller then ``snapshot``s and warm-restarts."""
+        with self._cv:
+            self._stopping = True
+            self._cv.notify_all()
+
+    @property
+    def stopping(self) -> bool:
+        return self._stopping
+
     def run(self, total_requests: int) -> dict:
-        """Serve until ``total_requests`` results have materialized.
+        """Serve until ``total_requests`` results have materialized in this
+        engine instance (lifetime counters from BEFORE a warm restart do
+        not raise the bar — ``_served`` restarts at zero), or — after
+        ``request_stop`` — until the admitted backlog has fully drained.
 
         One batch is kept in flight: batch k+1 is staged and dispatched
-        before batch k is synced, so transfer and compute overlap. Returns
-        the stats dict (see ``stats``).
+        before batch k is synced, so transfer and compute overlap. Each
+        batch's service time (dispatch -> materialized) feeds the straggler
+        watchdog. Returns the stats dict (see ``stats``).
         """
+        target = total_requests
         t0 = time.perf_counter()
         busy_s = 0.0
         inflight: tuple | None = None
-        while self._served < total_requests:
-            picked = self._pop_batch(self.collect_timeout_s)
+
+        def finish(flight) -> float:
+            key, reqs, out, t_disp = flight
+            tb = time.perf_counter()
+            self._resolve(key, reqs, out)
+            t_done = time.perf_counter()
+            self._batch_idx += 1
+            self.watchdog.observe(self._batch_idx, t_done - t_disp)
+            return t_done - tb
+
+        while self._served < target:
+            if self._stopping and self._pending == 0:
+                break   # drained: nothing left to admit or schedule
+            picked = self._pop_batch(
+                0.0 if self._stopping else self.collect_timeout_s)
             if picked is None:
                 if inflight is not None:
-                    tb = time.perf_counter()
-                    self._resolve(*inflight)
-                    busy_s += time.perf_counter() - tb
+                    busy_s += finish(inflight)
                     inflight = None
                 continue
             key, reqs = picked
             tb = time.perf_counter()
             out = self._dispatch(key, reqs)
             if inflight is not None:
-                self._resolve(*inflight)
+                finish(inflight)
             busy_s += time.perf_counter() - tb
-            inflight = (key, reqs, out)
+            inflight = (key, reqs, out, tb)
         if inflight is not None:
-            tb = time.perf_counter()
-            self._resolve(*inflight)
-            busy_s += time.perf_counter() - tb
+            busy_s += finish(inflight)
         return self.stats(seconds=time.perf_counter() - t0, busy_s=busy_s)
 
     # -- metrics ------------------------------------------------------------
 
     def stats(self, *, seconds: float, busy_s: float) -> dict:
-        lat = np.asarray(self._latencies_s, np.float64) * 1e3
+        lat = np.asarray(self._prev_latencies_s + self._latencies_s,
+                         np.float64) * 1e3
         if lat.size:
             p50, p90, p99 = np.percentile(lat, [50, 90, 99])
             latency_ms = {"p50": float(p50), "p90": float(p90),
@@ -252,6 +337,8 @@ class ServeEngine:
             sizes = bs.batch_sizes
             buckets[f"{op}/n={n}"] = {
                 "op": op, "n": n, "served": bs.served,
+                "lifetime_served": (self._prev_bucket_served.get(
+                    f"{op}/{n}", 0) + bs.served),
                 "batches": bs.batches,
                 "route": self._bound[key].route,
                 "max_block": self.max_batch,
@@ -274,4 +361,118 @@ class ServeEngine:
             "compute_throughput_per_s": self._served / max(busy_s, 1e-9),
             "latency_ms": latency_ms,
             "buckets": buckets,
+            # deployment-lifetime view: counters carried across warm
+            # restarts (``from_snapshot``), so preemption does not reset
+            # the trajectory a long-running endpoint reports
+            "lifetime": {
+                "served": self._prev_served + self._served,
+                "batches": self._prev_batches + batches,
+                "restarts": self.restarts,
+            },
+            "watchdog": {"events": list(self.watchdog.events),
+                         "evictions": list(self.evictions),
+                         "ewma_s": self.watchdog.ewma},
         }
+
+    # -- snapshot / warm restart (docs/fault_tolerance.md) ------------------
+
+    def snapshot(self, ckpt_dir: str) -> str:
+        """Persist the engine's durable state through ``ft.checkpoint``.
+
+        Must be called DRAINED (after ``request_stop`` + ``run`` returned):
+        a snapshot with admitted-but-unserved requests would silently drop
+        them on restart, so pending requests are a hard error. The saved
+        tree carries the lifetime latency record; the manifest ``extra``
+        carries bucket config (op, n, strict), engine knobs, counters and
+        the watchdog state. Results themselves are NOT snapshotted —
+        delivered results belong to the clients that collected them.
+        """
+        if self._pending:
+            raise RuntimeError(
+                f"snapshot with {self._pending} pending requests would "
+                f"drop them: request_stop() and let run() drain first")
+        lat = np.asarray(self._prev_latencies_s + self._latencies_s,
+                         np.float64)
+        extra = {
+            "schema": SNAPSHOT_SCHEMA,
+            "engine": {"max_batch": self.max_batch,
+                       "max_pending": self.max_pending,
+                       "collect_timeout_s": self.collect_timeout_s,
+                       "modulus_bits": self.ctx.modulus_bits,
+                       "model_shards": self.ctx.model_shards},
+            "buckets": [{"op": op, "n": n, "strict": self._strict[(op, n)]}
+                        for op, n in self._bound],
+            "counters": {
+                "served": self._prev_served + self._served,
+                "batches": self._prev_batches
+                           + sum(b.batches for b in
+                                 self._bucket_stats.values()),
+                "next_rid": self._next_rid,
+                "restarts": self.restarts,
+                "bucket_served": {
+                    f"{op}/{n}": (self._prev_bucket_served.get(
+                        f"{op}/{n}", 0) + self._bucket_stats[(op, n)].served)
+                    for op, n in self._bound},
+            },
+            "watchdog": self.watchdog.state_dict(),
+        }
+        step = self._prev_served + self._served
+        return ckpt_lib.save(ckpt_dir, step,
+                             {"latencies_s": lat}, extra=extra)
+
+    @classmethod
+    def from_snapshot(cls, ckpt_dir: str, *,
+                      model_shards: int | None = None,
+                      max_batch: int | None = None,
+                      watchdog_cfg: Optional[WatchdogConfig] = None,
+                      on_evict: Optional[Callable[["ServeEngine", int],
+                                                  None]] = None
+                      ) -> "ServeEngine":
+        """Warm-restart from ``snapshot``: rebuild the engine, re-register
+        and re-BIND every bucket on the restart-time context (pass
+        ``model_shards`` to re-shard elastically — this is the resize leg
+        of the watchdog's checkpoint -> resize -> restore path), and carry
+        the lifetime counters, latency record and watchdog baseline over.
+        """
+        step = ckpt_lib.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no engine snapshot under {ckpt_dir}")
+        extra = ckpt_lib.read_extra(ckpt_dir, step)
+        if extra.get("schema") != SNAPSHOT_SCHEMA:
+            raise ValueError(
+                f"{ckpt_dir} step {step} is not an engine snapshot "
+                f"(schema={extra.get('schema')!r})")
+        _, restored = ckpt_lib.restore_latest(
+            ckpt_dir, {"latencies_s": np.zeros(0, np.float64)})
+        eng_cfg = extra["engine"]
+        engine = cls(
+            max_batch=max_batch or eng_cfg["max_batch"],
+            max_pending=eng_cfg["max_pending"],
+            collect_timeout_s=eng_cfg["collect_timeout_s"],
+            modulus_bits=eng_cfg["modulus_bits"],
+            model_shards=(eng_cfg["model_shards"] if model_shards is None
+                          else model_shards),
+            watchdog_cfg=watchdog_cfg, on_evict=on_evict)
+        for b in extra["buckets"]:
+            engine.register(b["op"], int(b["n"]), strict=bool(b["strict"]))
+        counters = extra["counters"]
+        engine._prev_served = int(counters["served"])
+        engine._prev_batches = int(counters["batches"])
+        engine._prev_bucket_served = dict(counters["bucket_served"])
+        engine._next_rid = int(counters["next_rid"])
+        engine.restarts = int(counters["restarts"]) + 1
+        engine._prev_latencies_s = [
+            float(v) for v in np.asarray(restored["latencies_s"])]
+        engine.watchdog.load_state_dict(extra.get("watchdog", {}))
+        return engine
+
+    def elastic_restart(self, ckpt_dir: str, *,
+                        model_shards: int | None = None,
+                        max_batch: int | None = None) -> "ServeEngine":
+        """The on_evict path in one move: snapshot this (drained) engine,
+        then warm-restart it with a resized context. Returns the NEW
+        engine; this one stays stopped."""
+        self.snapshot(ckpt_dir)
+        return ServeEngine.from_snapshot(
+            ckpt_dir, model_shards=model_shards, max_batch=max_batch,
+            watchdog_cfg=self.watchdog.cfg, on_evict=self._user_on_evict)

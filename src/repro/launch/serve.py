@@ -153,35 +153,88 @@ def run_engine_service(args) -> dict:
     serve local fft next to the distributed polymul-mod tier. One result
     per bucket is verified against the registry's numpy oracle after the
     drain.
+
+    With ``--snapshot-dir`` the process is preemption-safe
+    (docs/fault_tolerance.md): SIGTERM stops admission, the engine drains
+    every already-admitted request, and the lifetime stats + bucket config
+    + watchdog state are snapshotted through ``ft.checkpoint``; a restart
+    with the same ``--snapshot-dir`` warm-restarts from the snapshot
+    (buckets re-bind on the restart-time context, counters carry over).
     """
     ops = [s.strip() for s in args.ops.split(",") if s.strip()]
     ns = [int(s) for s in args.ns.split(",") if s.strip()]
-    engine = ServeEngine(max_batch=args.batch, max_pending=args.max_pending,
-                         modulus_bits=args.modulus_bits,
-                         model_shards=args.model_shards)
-    for op in ops:
-        for n in ns:
-            engine.register(op, n)
-    engine.warmup()
+    from repro.ft import checkpoint as ckpt_lib
+    if args.snapshot_dir and ckpt_lib.latest_step(args.snapshot_dir) \
+            is not None:
+        engine = ServeEngine.from_snapshot(args.snapshot_dir,
+                                           model_shards=args.model_shards,
+                                           max_batch=args.batch)
+        print(f"[serve:engine] warm restart #{engine.restarts} from "
+              f"{args.snapshot_dir} "
+              f"(lifetime served: {engine.stats(seconds=1, busy_s=1)['lifetime']['served']})")
+    else:
+        engine = ServeEngine(max_batch=args.batch,
+                             max_pending=args.max_pending,
+                             modulus_bits=args.modulus_bits,
+                             model_shards=args.model_shards)
+    prev_term = None
+    if args.snapshot_dir:
+        import signal
 
-    rng = np.random.default_rng(0)
-    combos = [(op, n) for op in ops for n in ns]
-    kept: dict[tuple[str, int], tuple[int, object]] = {}
+        def _on_term(signum, frame):
+            # drain-and-snapshot path: stop admitting; run() finishes the
+            # admitted backlog and returns, then the snapshot lands below.
+            # Installed BEFORE warmup: a preemption during compile still
+            # drains (to an empty backlog) and snapshots. request_stop runs
+            # on a SEPARATE thread: the handler executes on the main
+            # thread's frame, which may be INSIDE the engine's condition
+            # lock — taking it from the handler would self-deadlock.
+            threading.Thread(target=engine.request_stop,
+                             daemon=True).start()
+        prev_term = signal.signal(signal.SIGTERM, _on_term)
 
-    def producer():
-        for rid in range(args.requests):
-            op, n = combos[rid % len(combos)]
-            payload = engine.bound(op, n).random_payload(rng)
-            if (op, n) not in kept:
-                kept[(op, n)] = (rid, payload)
-            engine.submit(op, n, payload, rid=rid)
+    try:
+        for op in ops:
+            for n in ns:
+                engine.register(op, n)
+        engine.warmup()
 
-    th = threading.Thread(target=producer, daemon=True)
-    th.start()
-    stats = engine.run(args.requests)
-    th.join()
+        rng = np.random.default_rng(0)
+        combos = [(op, n) for op in ops for n in ns]
+        kept: dict[tuple[str, int], tuple[int, object]] = {}
+
+        def producer():
+            from repro.launch.engine import EngineStopped
+            try:
+                for rid in range(args.requests):
+                    op, n = combos[rid % len(combos)]
+                    payload = engine.bound(op, n).random_payload(rng)
+                    if (op, n) not in kept:
+                        kept[(op, n)] = (rid, payload)
+                    engine.submit(op, n, payload, rid=rid)
+            except EngineStopped:
+                pass  # draining toward a snapshot: shed the rest of the load
+
+        th = threading.Thread(target=producer, daemon=True)
+        th.start()
+        # sync marker for supervisors/tests: warmup done, handler armed
+        print(f"[serve:engine] serving {args.requests} requests "
+              f"across {len(combos)} buckets", flush=True)
+        stats = engine.run(args.requests)
+        th.join()
+        if args.snapshot_dir:
+            path = engine.snapshot(args.snapshot_dir)
+            print(f"[serve:engine] snapshot -> {path}")
+    finally:
+        if prev_term is not None:
+            # the handler closes over THIS engine — leaving it installed
+            # would hijack SIGTERM for any later engine in the process
+            # (e.g. an in-process warm restart or the test runner itself)
+            import signal
+            signal.signal(signal.SIGTERM, prev_term)
     for (op, n), (rid, payload) in kept.items():
-        engine.bound(op, n).verify(payload, engine.results[rid])
+        if rid in engine.results:   # absent only if shed during a drain
+            engine.bound(op, n).verify(payload, engine.results[rid])
 
     lat = stats["latency_ms"]
     print(f"[serve:engine] buckets={len(stats['buckets'])} "
@@ -251,6 +304,12 @@ def main(argv=None):
     ap.add_argument("--max-pending", type=int, default=1024,
                     help="engine service: bounded admission queue — "
                          "producers block (backpressure) when full")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="engine service: preemption-safe state dir — "
+                         "SIGTERM drains in-flight buckets and snapshots "
+                         "engine stats + bucket config there; a restart "
+                         "with the same dir warm-restarts from it "
+                         "(docs/fault_tolerance.md)")
     ap.add_argument("--modulus-bits", type=int, default=None,
                     help=op_registry.cli_knob_help(
                         "modulus_bits",

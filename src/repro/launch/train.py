@@ -16,9 +16,16 @@ real sharding constraints and the batch is device_put over the data axis.
 With ``--mesh PxDxM --compress-grads`` the step becomes the pod-mesh
 variant (``train.step.make_train_step(pod_axis="pod")`` inside shard_map):
 gradients mean-reduce across pods through the int8 error-feedback
-compressed psum, with the quantization residual carried step to step
-(the ROADMAP's cross-pod compression wiring, surfaced as a flag; the
-residual is not checkpointed — a resume restarts it at zero).
+compressed psum, with the quantization residual carried step to step.
+
+Resume safety (docs/fault_tolerance.md): the checkpoint payload carries
+the error-feedback residual ``grad_err`` alongside params/opt (with its
+explicit leading pod axis, restored under a ``P("pod")`` sharding so an
+elastic re-shard cannot collapse pod-local residuals), and the manifest
+``extra`` carries the watchdog EWMA/event state plus the data-pipeline
+step cursor. A SIGKILLed ``--compress-grads`` run resumed from its last
+checkpoint follows a loss trajectory bitwise-identical to the
+uninterrupted run (pinned by the kill-and-resume subprocess test).
 """
 from __future__ import annotations
 
@@ -49,6 +56,35 @@ def _batch_sharding(mesh, v):
     return NamedSharding(mesh, spec)
 
 
+def _tree_shardings(tree):
+    """The live placement of every leaf, for an explicit-sharding restore:
+    without it ``ckpt_lib.restore`` materializes unsharded host arrays and
+    the first step reshards implicitly (an invisible all-gather + scatter
+    on a multi-device mesh)."""
+    return jax.tree.map(lambda x: x.sharding, tree)
+
+
+def _check_resume_stream(extra: dict, args, start_step: int) -> None:
+    """Refuse a resume that would silently switch the data stream: the
+    synthetic pipeline is deterministic per (seed, step, batch, seq), so a
+    changed knob means the resumed trajectory is not a continuation."""
+    cursor = extra.get("data")
+    if not cursor:
+        return
+    want = {"seed": args.seed, "global_batch": args.batch, "seq": args.seq}
+    got = {k: cursor.get(k) for k in want}
+    if got != want:
+        raise RuntimeError(
+            f"checkpoint data cursor {got} does not match the resume flags "
+            f"{want}; resuming would replay a DIFFERENT stream — restart "
+            f"with matching --seed/--batch/--seq or a fresh --ckpt-dir")
+    if cursor.get("next_step") is not None \
+            and int(cursor["next_step"]) != start_step:
+        raise RuntimeError(
+            f"checkpoint step {start_step} disagrees with its own data "
+            f"cursor {cursor['next_step']} — corrupt manifest")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -60,6 +96,10 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--loss-log", default=None, metavar="PATH",
+                    help="append one 'step <float.hex>' line per step "
+                         "(flushed per step — survives SIGKILL); the "
+                         "kill-and-resume test compares these bitwise")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default=None, metavar="DxM|PxDxM",
@@ -114,6 +154,47 @@ def main(argv=None):
         return _run(args, mesh)
 
 
+def _restore_state(args, mesh, params, opt_state, grad_err, watchdog):
+    """Resume from the newest checkpoint with the step's EXPLICIT
+    shardings: without them the arrays land unsharded on the default
+    device and the first step reshards them implicitly (an invisible
+    broadcast from device 0 on every multi-device mesh). Params/opt are
+    replicated state in both step variants, so on a mesh their sharding is
+    P() over the WHOLE mesh; the residual tree additionally pins P("pod")
+    over its leading axis — it is pod-LOCAL state, and an elastic re-shard
+    that treated it as replicated would silently collapse every pod's
+    residual to one pod's values. Also restores the watchdog baseline and
+    validates the data-stream cursor from the manifest ``extra``."""
+    from jax.sharding import PartitionSpec as P
+
+    like = {"params": params, "opt": opt_state}
+    if mesh is not None:
+        repl = NamedSharding(mesh, P())
+        shardings = {"params": jax.tree.map(lambda _: repl, params),
+                     "opt": jax.tree.map(lambda _: repl, opt_state)}
+    else:
+        shardings = {"params": _tree_shardings(params),
+                     "opt": _tree_shardings(opt_state)}
+    if grad_err is not None:
+        like["grad_err"] = grad_err
+        shardings["grad_err"] = jax.tree.map(
+            lambda _: NamedSharding(mesh, P("pod")), grad_err)
+    step0, restored = ckpt_lib.restore_latest(args.ckpt_dir, like,
+                                              shardings)
+    if step0 is None:
+        return 0, params, opt_state, grad_err
+    params, opt_state = restored["params"], restored["opt"]
+    if grad_err is not None:
+        grad_err = restored["grad_err"]
+    extra = ckpt_lib.read_extra(args.ckpt_dir, step0)
+    _check_resume_stream(extra, args, step0)
+    if extra.get("watchdog"):
+        watchdog.load_state_dict(extra["watchdog"])
+    print(f"[train] resumed from step {step0}"
+          + (" (grad_err restored)" if grad_err is not None else ""))
+    return step0, params, opt_state, grad_err
+
+
 def _run(args, mesh):
 
     cfg = get_config(args.arch)
@@ -129,25 +210,28 @@ def _run(args, mesh):
     print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
           f"batch={args.batch} seq={args.seq}")
 
-    start_step = 0
-    if args.ckpt_dir:
-        step0, restored = ckpt_lib.restore_latest(
-            args.ckpt_dir, {"params": params, "opt": opt_state})
-        if step0 is not None:
-            params, opt_state = restored["params"], restored["opt"]
-            start_step = step0
-            print(f"[train] resumed from step {start_step}")
-
-    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
-    prefetch = Prefetcher(data, start_step=start_step)
     watchdog = StepWatchdog()
-
     grad_err = None
     if args.compress_grads:
         from jax.sharding import PartitionSpec as P
 
         from repro.dist import collectives
         n_pods = int(mesh.shape["pod"])
+        # The error-feedback residual carries an explicit leading pod axis
+        # from birth (see pod_body below for why P("pod") and not P()).
+        grad_err = jax.tree.map(
+            lambda z: jnp.broadcast_to(z[None], (n_pods, *z.shape)),
+            collectives.zeros_like_errs(params))
+
+    start_step = 0
+    if args.ckpt_dir:
+        start_step, params, opt_state, grad_err = _restore_state(
+            args, mesh, params, opt_state, grad_err, watchdog)
+
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    prefetch = Prefetcher(data, start_step=start_step)
+
+    if args.compress_grads:
         batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
         bspec = P(batch_axes)
         # The batch shards over (pod, data): the step must mean-reduce
@@ -167,9 +251,6 @@ def _run(args, mesh):
             p, o, err, m = pod_step(p, o, err, batch)
             return p, o, jax.tree.map(lambda e: e[None], err), m
 
-        grad_err = jax.tree.map(
-            lambda z: jnp.broadcast_to(z[None], (n_pods, *z.shape)),
-            collectives.zeros_like_errs(params))
         train_step = jax.jit(
             compat.shard_map(pod_body, mesh=mesh,
                              in_specs=(P(), P(), P("pod"), bspec),
@@ -180,8 +261,25 @@ def _run(args, mesh):
         train_step = jax.jit(step_lib.make_train_step(cfg, opt_cfg),
                              donate_argnums=(0, 1))
 
+    def save_ckpt(at_step: int) -> None:
+        # One payload for every save site: params + opt + (under
+        # --compress-grads) the error-feedback residual, with the manifest
+        # ``extra`` carrying the host-side state a resume needs — the
+        # watchdog's EWMA/event baseline and the data-pipeline cursor
+        # (docs/fault_tolerance.md pins this contract).
+        tree = {"params": params, "opt": opt_state}
+        if grad_err is not None:
+            tree["grad_err"] = grad_err
+        ckpt_lib.save(args.ckpt_dir, at_step, tree, extra={
+            "watchdog": watchdog.state_dict(),
+            "data": {"next_step": at_step, "seed": args.seed,
+                     "global_batch": args.batch, "seq": args.seq},
+            "compress_grads": bool(args.compress_grads),
+        })
+
     losses = []
     batch_shardings: dict = {}
+    loss_log = open(args.loss_log, "a") if args.loss_log else None
     t_start = time.time()
     try:
         for step in range(start_step, args.steps):
@@ -216,25 +314,29 @@ def _run(args, mesh):
             jax.block_until_ready(metrics["loss"])
             flagged = watchdog.end_step(step)
             losses.append(float(metrics["loss"]))
+            if loss_log is not None:
+                loss_log.write(f"{step} {losses[-1].hex()}\n")
+                loss_log.flush()
             if step % args.log_every == 0 or step == args.steps - 1:
                 print(f"[train] step={step} loss={losses[-1]:.4f} "
                       f"gnorm={float(metrics['grad_norm']):.3f} "
                       f"lr={float(metrics['lr']):.2e}"
                       + (" STRAGGLER" if flagged else ""))
             if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-                ckpt_lib.save(args.ckpt_dir, step + 1,
-                              {"params": params, "opt": opt_state})
+                save_ckpt(step + 1)
     finally:
         prefetch.stop()
+        if loss_log is not None:
+            loss_log.close()
 
     dt = time.time() - t_start
     steps_done = args.steps - start_step
+    span = f"loss {losses[0]:.4f} -> {losses[-1]:.4f}" if losses \
+        else "already complete"
     print(f"[train] done: {steps_done} steps in {dt:.1f}s "
-          f"({steps_done / max(dt, 1e-9):.2f} steps/s); "
-          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+          f"({steps_done / max(dt, 1e-9):.2f} steps/s); {span}")
     if args.ckpt_dir:
-        ckpt_lib.save(args.ckpt_dir, args.steps,
-                      {"params": params, "opt": opt_state})
+        save_ckpt(args.steps)
     return losses
 
 
