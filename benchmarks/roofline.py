@@ -21,10 +21,10 @@ import os
 
 from benchmarks.runlib import emit
 from repro.configs.registry import SHAPES, get_config
-
-PEAK_FLOPS = 197e12        # bf16 per chip (v5e)
-HBM_BW = 819e9             # bytes/s per chip
-LINK_BW = 50e9             # bytes/s per ICI link
+# Single source of truth for the machine model lives with the serving
+# cost model (repro.core.cost) so the planner and this roofline can
+# never drift apart; re-exported here for the existing callers.
+from repro.core.cost import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: F401
 
 
 def collective_term_from_ledger(led) -> float:

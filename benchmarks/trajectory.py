@@ -65,6 +65,11 @@ def deterministic_metrics(bench: dict) -> dict[str, tuple[float, str]]:
         out[f"real_complex_cycle_ratio/n={n}"] = (float(v), "min")
     for op, v in (bench.get("dist_real_complex_byte_ratio") or {}).items():
         out[f"dist_real_complex_byte_ratio/{op}"] = (float(v), "min")
+    ap = bench.get("auto_plan") or {}
+    if "agreement" in ap:
+        # predicted-vs-measured tier agreement of the auto planner:
+        # pinned at 1.0 — any drop is a cost-model rot, not noise.
+        out["auto_plan_agreement"] = (float(ap["agreement"]), "max")
     for rec in bench.get("records", []):
         op = rec.get("op")
         # closed-form PIM model outputs: deterministic per commit

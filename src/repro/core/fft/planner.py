@@ -35,6 +35,12 @@ class FFTPlan:
     #: traffic of the complex tier on real input, with the doubled batch
     #: block the halved working set buys (docs/fourier.md).
     real: bool = False
+    #: machine-readable cost breakdown from ``core.cost.workload_cost``
+    #: when the plan was auto-chosen (``plan(..., workload=...)``); None
+    #: for explicit-knob plans. Excluded from eq/hash so auto plans and
+    #: hand-built plans with the same execution config compare equal
+    #: (the serve engine keys buckets on plans).
+    cost: dict | None = dataclasses.field(default=None, compare=False)
 
     def describe(self) -> str:
         if self.exact:
@@ -66,7 +72,8 @@ _MAX_LOCAL_N_REAL = _MAX_LOCAL_N                   # = 256K points
 
 def plan(n: int, batch: int, *, model_shards: int = 1,
          exact: bool = False, real: bool = False,
-         force_distributed: bool = False) -> FFTPlan:
+         force_distributed: bool = False,
+         workload: str | None = None) -> FFTPlan:
     """Execution plan for a batch of n-point transforms.
 
     ``exact=True`` routes to the modular-NTT tier (uint32 residues, radix-2
@@ -87,6 +94,16 @@ def plan(n: int, batch: int, *, model_shards: int = 1,
     policy would keep the sequence local (serve's explicit --model-shards
     request) — shape validation still applies, so the returned plan is
     the one actually executable, not a hand-built record.
+    ``workload=`` switches to AUTO mode (docs/planner.md): the cost model
+    in ``core.cost`` scores every executable (tier, packing) candidate —
+    local vs four-step, real vs complex packing, PIM vs XLA backend — and
+    the predicted-cheapest one comes back with the full breakdown on
+    ``FFTPlan.cost``. Explicit knobs still win: ``real=True`` pins the
+    packing, ``force_distributed=True`` pins the tier, and the legacy
+    no-workload call is untouched. A workload with no executable
+    candidate raises ValueError naming every pruned candidate's
+    constraint (VMEM ceiling, ``D^2 | n`` tiling, ``2*D^2 | n`` for the
+    ordered real tier) instead of a bare error.
     Raises ValueError on non-power-of-two n so misuse fails loudly instead
     of silently mis-planning (asserts vanish under ``python -O``).
     """
@@ -99,6 +116,10 @@ def plan(n: int, batch: int, *, model_shards: int = 1,
                          "mutually exclusive")
     if force_distributed and model_shards == 1:
         raise ValueError("force_distributed needs model_shards > 1")
+    if workload is not None:
+        return _plan_auto(n, batch, workload, model_shards,
+                          exact=exact, real=real,
+                          force_distributed=force_distributed)
     if exact:
         if not force_distributed and (n <= _MAX_LOCAL_N_EXACT
                                       or model_shards == 1):
@@ -141,6 +162,61 @@ def plan(n: int, batch: int, *, model_shards: int = 1,
     _check_dist_shape(n, model_shards, real=False)
     return FFTPlan(tier="distributed", radix=2, block_b=1,
                    seq_shards=model_shards)
+
+
+def _plan_auto(n: int, batch: int, workload: str, model_shards: int, *,
+               exact: bool, real: bool,
+               force_distributed: bool) -> FFTPlan:
+    """Cost-model-driven tier choice (docs/planner.md).
+
+    The candidate space is every (tier, packing) pair the XLA kernels can
+    execute for ``workload``; ``core.cost.workload_cost`` scores each on
+    both backends and this returns the predicted-cheapest as a normal
+    executable ``FFTPlan`` with the breakdown attached. Explicit knobs
+    narrow the space rather than being ignored: ``real=True`` keeps only
+    real-packed candidates, ``force_distributed=True`` only distributed
+    ones. ``exact=`` must agree with the workload — the modular route is
+    a workload property (``polymul-mod``), not a packing choice.
+    """
+    from repro.core.cost import WORKLOADS, workload_cost
+    if workload not in WORKLOADS:
+        raise ValueError(f"unknown workload {workload!r}; "
+                         f"expected one of {WORKLOADS}")
+    wl_exact = workload == "polymul-mod"
+    if exact and not wl_exact:
+        raise ValueError(f"exact=True conflicts with workload="
+                         f"{workload!r}: the exact mod-q route is the "
+                         f"'polymul-mod' workload")
+    if real and workload not in ("rfft", "polymul-real"):
+        raise ValueError(f"real=True conflicts with workload="
+                         f"{workload!r}: only 'rfft'/'polymul-real' "
+                         f"have a real-packed route")
+    tiers = (("distributed",) if force_distributed
+             else ("local", "distributed"))
+    packings = [True] if real else None
+    breakdown = workload_cost(workload, n, batch, n_devices=model_shards,
+                              tiers=tiers, packings=packings)
+    best = breakdown["best"]
+    if best is None:
+        lines = [
+            f"  - tier={p['tier']}"
+            f"{', real-packed' if p['real'] else ''}: {p['reason']}"
+            for p in breakdown["pruned"]]
+        raise ValueError(
+            f"no executable tier for workload={workload!r} n={n} over "
+            f"{model_shards} shard(s); every candidate was pruned:\n"
+            + "\n".join(lines))
+    if best["tier"] == "local":
+        radix = (2 if wl_exact
+                 else (4 if (n.bit_length() - 1) >= 2 else 2))
+        block = (plan_batch_block(n, real=True) if best["real"]
+                 else plan_batch_block(n))
+        return FFTPlan(tier="local", radix=radix, block_b=block,
+                       seq_shards=1, exact=wl_exact, real=best["real"],
+                       cost=breakdown)
+    return FFTPlan(tier="distributed", radix=2, block_b=1,
+                   seq_shards=model_shards, exact=wl_exact,
+                   real=best["real"], cost=breakdown)
 
 
 def _check_dist_shape(n: int, model_shards: int, *, real: bool) -> None:

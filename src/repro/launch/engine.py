@@ -59,6 +59,16 @@ from repro.launch import ops as op_registry
 
 SNAPSHOT_SCHEMA = "serve_engine_snapshot/v1"
 
+#: Bounded window for the per-request latency record. Lifetime percentiles
+#: are computed over (at most) the most recent window, and — the actual
+#: bug this bounds — ``snapshot`` persists at most this many samples, so a
+#: restart loop (snapshot -> from_snapshot -> snapshot ...) plateaus
+#: instead of growing the payload by one generation's traffic each cycle.
+#: Older samples DECAY out of the percentile inputs by design: a
+#: deployment's p99 should describe recent service, not the union of every
+#: generation since the first boot.
+LATENCY_WINDOW = 4096
+
 
 class Backpressure(RuntimeError):
     """Admission rejected: the bounded request queue is full."""
@@ -81,6 +91,10 @@ class _BucketStats:
     served: int = 0
     batches: int = 0
     batch_sizes: list = dataclasses.field(default_factory=list)
+    # accumulated dispatch -> materialized seconds of this bucket's
+    # batches: the OBSERVED side of the cost model's predicted-vs-observed
+    # comparison (docs/planner.md)
+    service_s: float = 0.0
 
 
 class ServeEngine:
@@ -96,6 +110,7 @@ class ServeEngine:
 
     def __init__(self, *, max_batch: int = 64, max_pending: int = 1024,
                  modulus_bits: int | None = None, model_shards: int = 1,
+                 auto: bool = False,
                  collect_timeout_s: float = 0.05,
                  watchdog_cfg: Optional[WatchdogConfig] = None,
                  on_evict: Optional[Callable[["ServeEngine", int], None]]
@@ -107,8 +122,11 @@ class ServeEngine:
         self.max_batch = max_batch
         self.max_pending = max_pending
         self.collect_timeout_s = collect_timeout_s
+        # auto=True: each bucket's bind lets the cost model pick the tier
+        # and packing (plan(workload=...)); explicit-knob binding otherwise.
         self.ctx = op_registry.OpContext(modulus_bits=modulus_bits,
-                                         model_shards=model_shards)
+                                         model_shards=model_shards,
+                                         auto=auto)
         self._bound: dict[tuple[str, int], op_registry.BoundOp] = {}
         self._strict: dict[tuple[str, int], bool] = {}
         self._bucket_stats: dict[tuple[str, int], _BucketStats] = {}
@@ -295,6 +313,9 @@ class ServeEngine:
             t_done = time.perf_counter()
             self._batch_idx += 1
             self.watchdog.observe(self._batch_idx, t_done - t_disp)
+            # observed service time, attributed to the bucket: the
+            # measured side of predicted-vs-observed in stats()
+            self._bucket_stats[key].service_s += t_done - t_disp
             return t_done - tb
 
         while self._served < target:
@@ -321,7 +342,10 @@ class ServeEngine:
     # -- metrics ------------------------------------------------------------
 
     def stats(self, *, seconds: float, busy_s: float) -> dict:
-        lat = np.asarray(self._prev_latencies_s + self._latencies_s,
+        # Percentiles over the bounded recent window (LATENCY_WINDOW):
+        # lifetime inputs decay instead of accumulating across restarts.
+        lat = np.asarray((self._prev_latencies_s
+                          + self._latencies_s)[-LATENCY_WINDOW:],
                          np.float64) * 1e3
         if lat.size:
             p50, p90, p99 = np.percentile(lat, [50, 90, 99])
@@ -335,12 +359,13 @@ class ServeEngine:
         for key, bs in self._bucket_stats.items():
             op, n = key
             sizes = bs.batch_sizes
-            buckets[f"{op}/n={n}"] = {
+            bound = self._bound[key]
+            entry = {
                 "op": op, "n": n, "served": bs.served,
                 "lifetime_served": (self._prev_bucket_served.get(
                     f"{op}/{n}", 0) + bs.served),
                 "batches": bs.batches,
-                "route": self._bound[key].route,
+                "route": bound.route,
                 "max_block": self.max_batch,
                 "mean_batch": (sum(sizes) / len(sizes)) if sizes else 0.0,
                 # fill of the continuous-batching block: 1.0 means every
@@ -348,7 +373,20 @@ class ServeEngine:
                 "utilization": (sum(sizes) / (len(sizes) * self.max_batch))
                                if sizes else 0.0,
                 "batch_sizes": list(sizes),
+                # observed per-request service seconds (dispatch ->
+                # materialized, batch time amortized over its rows)
+                "observed_s_per_req": (bs.service_s / bs.served
+                                       if bs.served else None),
             }
+            cost = getattr(bound.plan, "cost", None)
+            if cost is not None and cost.get("best") is not None:
+                best = cost["best"]
+                # the bind-time batch hint the plan was costed at
+                per = max(1, cost.get("batch") or 1)
+                entry["predicted_s_per_req"] = best["total_s"] / per
+                entry["predicted_tier"] = best["tier"]
+                entry["predicted_backend"] = best["backend_best"]
+            buckets[f"{op}/n={n}"] = entry
         batches = sum(b.batches for b in self._bucket_stats.values())
         return {
             "served": self._served,
@@ -391,7 +429,12 @@ class ServeEngine:
             raise RuntimeError(
                 f"snapshot with {self._pending} pending requests would "
                 f"drop them: request_stop() and let run() drain first")
-        lat = np.asarray(self._prev_latencies_s + self._latencies_s,
+        # Bounded: persist at most the recent LATENCY_WINDOW samples, so a
+        # snapshot -> restart -> snapshot loop plateaus instead of growing
+        # the payload by each generation's traffic (the old unbounded
+        # prev+current concatenation did exactly that).
+        lat = np.asarray((self._prev_latencies_s
+                          + self._latencies_s)[-LATENCY_WINDOW:],
                          np.float64)
         extra = {
             "schema": SNAPSHOT_SCHEMA,
@@ -399,7 +442,8 @@ class ServeEngine:
                        "max_pending": self.max_pending,
                        "collect_timeout_s": self.collect_timeout_s,
                        "modulus_bits": self.ctx.modulus_bits,
-                       "model_shards": self.ctx.model_shards},
+                       "model_shards": self.ctx.model_shards,
+                       "auto": self.ctx.auto},
             "buckets": [{"op": op, "n": n, "strict": self._strict[(op, n)]}
                         for op, n in self._bound],
             "counters": {
@@ -452,6 +496,7 @@ class ServeEngine:
             modulus_bits=eng_cfg["modulus_bits"],
             model_shards=(eng_cfg["model_shards"] if model_shards is None
                           else model_shards),
+            auto=bool(eng_cfg.get("auto", False)),
             watchdog_cfg=watchdog_cfg, on_evict=on_evict)
         for b in extra["buckets"]:
             engine.register(b["op"], int(b["n"]), strict=bool(b["strict"]))

@@ -52,9 +52,18 @@ class OpConfigError(ValueError):
 @dataclasses.dataclass(frozen=True)
 class OpContext:
     """Process-level route parameterization shared by every op of a serve
-    process (CLI flags); ``OpSpec.narrow`` strips the knobs an op ignores."""
+    process (CLI flags); ``OpSpec.narrow`` strips the knobs an op ignores.
+
+    ``auto=True`` hands tier/packing choice to the cost model
+    (docs/planner.md): ``model_shards`` becomes the AVAILABLE device
+    count rather than a demand, and each bind asks
+    ``plan(n, batch, workload=<op name>, ...)`` for the predicted-cheapest
+    executable route. Strict knob validation is unchanged — knobs an op
+    cannot consume are still rejected, auto only picks among routes the
+    op really has."""
     modulus_bits: int | None = None
     model_shards: int = 1
+    auto: bool = False
 
 
 @dataclasses.dataclass
@@ -151,7 +160,8 @@ class OpSpec:
         process-level context against ops with different routes."""
         return OpContext(
             modulus_bits=ctx.modulus_bits if self.uses_modulus_bits else None,
-            model_shards=ctx.model_shards if self.uses_model_shards else 1)
+            model_shards=ctx.model_shards if self.uses_model_shards else 1,
+            auto=ctx.auto)
 
     def bind(self, n: int, ctx: OpContext = OpContext(), *,
              batch: int = 0, strict: bool = True) -> BoundOp:
@@ -272,7 +282,10 @@ def _plan_or_config_error(**kw):
 def _bind_fft(spec: OpSpec, n: int, ctx: OpContext, batch: int) -> BoundOp:
     import jax
     from repro.core import fft as fft_core
-    plan = _plan_or_config_error(n=n, batch=batch)
+    if ctx.auto:
+        plan = _plan_or_config_error(n=n, batch=batch, workload="fft")
+    else:
+        plan = _plan_or_config_error(n=n, batch=batch)
     return BoundOp(spec=spec, n=n, ctx=ctx, plan=plan, route="fft",
                    fn=jax.jit(lambda x: fft_core.fft(x)),
                    payload_dtype=np.complex64)
@@ -295,8 +308,21 @@ register_op(
 
 def _bind_rfft(spec: OpSpec, n: int, ctx: OpContext, batch: int) -> BoundOp:
     import jax
+    import jax.numpy as jnp
     from repro.core import fft as fft_core
-    plan = _plan_or_config_error(n=n, batch=batch, real=True)
+    if ctx.auto:
+        plan = _plan_or_config_error(n=n, batch=batch, workload="rfft")
+        if not plan.real:
+            # Cost model preferred complex packing (only reachable where
+            # the real route is pruned): cast up, full transform, keep
+            # the half spectrum — same payload/result contract.
+            return BoundOp(
+                spec=spec, n=n, ctx=ctx, plan=plan, route="rfft-complex",
+                fn=jax.jit(lambda x: fft_core.fft(
+                    x.astype(jnp.complex64))[..., :n // 2 + 1]),
+                payload_dtype=np.float32)
+    else:
+        plan = _plan_or_config_error(n=n, batch=batch, real=True)
     return BoundOp(spec=spec, n=n, ctx=ctx, plan=plan, route="rfft-real",
                    fn=jax.jit(lambda x: fft_core.rfft(x)),
                    payload_dtype=np.float32)
@@ -321,7 +347,10 @@ def _bind_polymul(spec: OpSpec, n: int, ctx: OpContext, batch: int) -> BoundOp:
     import jax
     import jax.numpy as jnp
     from repro.core import fft as fft_core
-    plan = _plan_or_config_error(n=n, batch=batch)
+    if ctx.auto:
+        plan = _plan_or_config_error(n=n, batch=batch, workload="polymul")
+    else:
+        plan = _plan_or_config_error(n=n, batch=batch)
     return BoundOp(
         spec=spec, n=n, ctx=ctx, plan=plan, route="polymul",
         fn=jax.jit(lambda a, b: fft_core.polymul(
@@ -347,7 +376,14 @@ register_op(
 # ---------------------------------------------------------------------------
 
 def _validate_polymul_real(spec: OpSpec, n: int, ctx: OpContext) -> None:
-    if ctx.model_shards > 1:
+    if ctx.auto:
+        # Auto mode: model_shards is the AVAILABLE device count; the
+        # chooser may keep the sequence local, so only fail when no
+        # candidate at all is executable (the planner's pruned-list
+        # error names each constraint).
+        _plan_or_config_error(n=n, batch=0, workload="polymul-real",
+                              model_shards=ctx.model_shards)
+    elif ctx.model_shards > 1:
         _plan_or_config_error(n=n, batch=0, real=True,
                               model_shards=ctx.model_shards,
                               force_distributed=True)
@@ -356,19 +392,37 @@ def _validate_polymul_real(spec: OpSpec, n: int, ctx: OpContext) -> None:
 def _bind_polymul_real(spec: OpSpec, n: int, ctx: OpContext,
                        batch: int) -> BoundOp:
     import jax
+    import jax.numpy as jnp
     from repro.core import fft as fft_core
-    if ctx.model_shards > 1:
-        from repro.core.fft import distributed as dfft
+    if ctx.auto:
+        plan = _plan_or_config_error(n=n, batch=batch,
+                                     workload="polymul-real",
+                                     model_shards=ctx.model_shards)
+    elif ctx.model_shards > 1:
         plan = _plan_or_config_error(n=n, batch=batch, real=True,
                                      model_shards=ctx.model_shards,
                                      force_distributed=True)
+    else:
+        plan = _plan_or_config_error(n=n, batch=batch, real=True)
+    if plan.tier == "distributed":
+        from repro.core.fft import distributed as dfft
         mesh = jax.make_mesh((ctx.model_shards,), ("model",))
         return BoundOp(
             spec=spec, n=n, ctx=ctx, plan=plan,
             route="polymul-real-distributed",
             fn=jax.jit(dfft.make_sharded_polymul_real(mesh, batch_axes=())),
             payload_dtype=np.float32, mesh=mesh)
-    plan = _plan_or_config_error(n=n, batch=batch, real=True)
+    if not plan.real:
+        # Complex-packing fallback (auto only): full-width product on
+        # cast-up operands, real part back — the route the cost model
+        # priced as the "complex" packing candidate.
+        return BoundOp(
+            spec=spec, n=n, ctx=ctx, plan=plan,
+            route="polymul-real-complex",
+            fn=jax.jit(lambda a, b: fft_core.polymul(
+                a.astype(jnp.complex64), b.astype(jnp.complex64),
+                mode="circular").real),
+            payload_dtype=np.float32)
     return BoundOp(
         spec=spec, n=n, ctx=ctx, plan=plan, route="polymul-real-packed",
         fn=jax.jit(lambda a, b: fft_core.polymul_real(a, b,
@@ -403,7 +457,13 @@ def _validate_polymul_mod(spec: OpSpec, n: int, ctx: OpContext) -> None:
             "distributed polymul-mod is single-limb: RNS "
             "(modulus_bits > 30) shards limbs, not the sequence — drop "
             "--model-shards or use modulus_bits <= 30")
-    if ctx.model_shards > 1:
+    if ctx.auto:
+        # RNS shards limbs, not the sequence: the chooser only sees the
+        # local tier for multi-limb moduli.
+        shards = 1 if (bits is not None and bits > 30) else ctx.model_shards
+        _plan_or_config_error(n=n, batch=0, workload="polymul-mod",
+                              model_shards=shards)
+    elif ctx.model_shards > 1:
         _plan_or_config_error(n=n, batch=0, exact=True,
                               model_shards=ctx.model_shards,
                               force_distributed=True)
@@ -422,13 +482,21 @@ def _validate_polymul_mod(spec: OpSpec, n: int, ctx: OpContext) -> None:
 def _bind_polymul_mod(spec: OpSpec, n: int, ctx: OpContext,
                       batch: int) -> BoundOp:
     bits = ctx.modulus_bits
-    if ctx.model_shards > 1:
-        import jax
-        from repro.core.ntt import NTTParams
-        from repro.core.ntt import distributed as dntt
+    rns_route = bits is not None and bits > 30
+    if ctx.auto:
+        plan = _plan_or_config_error(
+            n=n, batch=batch, workload="polymul-mod",
+            model_shards=1 if rns_route else ctx.model_shards)
+    elif ctx.model_shards > 1:
         plan = _plan_or_config_error(n=n, batch=batch, exact=True,
                                      model_shards=ctx.model_shards,
                                      force_distributed=True)
+    else:
+        plan = _plan_or_config_error(n=n, batch=batch, exact=True)
+    if plan.tier == "distributed":
+        import jax
+        from repro.core.ntt import NTTParams
+        from repro.core.ntt import distributed as dntt
         params = NTTParams.make(n, bits=30 if bits is None else bits)
         mesh = jax.make_mesh((ctx.model_shards,), ("data",))
         return BoundOp(
@@ -436,7 +504,6 @@ def _bind_polymul_mod(spec: OpSpec, n: int, ctx: OpContext,
             route="polymul-mod-distributed",
             fn=jax.jit(dntt.make_sharded_ntt_polymul(mesh, params)),
             payload_dtype=np.uint32, ntt_params=params, mesh=mesh)
-    plan = _plan_or_config_error(n=n, batch=batch, exact=True)
     if bits is not None and bits > 30:
         from repro.core.ntt import RNSParams, rns_polymul
         rns = RNSParams.make(n, modulus_bits=bits)

@@ -75,13 +75,15 @@ class FFTService:
     """
 
     def __init__(self, n: int, batch: int, op: str = "fft",
-                 modulus_bits: int | None = None, model_shards: int = 1):
+                 modulus_bits: int | None = None, model_shards: int = 1,
+                 auto: bool = False):
         self.n = n
         self.batch = batch
         self.op = op
         self.engine = ServeEngine(max_batch=batch,
                                   modulus_bits=modulus_bits,
-                                  model_shards=model_shards)
+                                  model_shards=model_shards,
+                                  auto=auto)
         # strict: knobs the op does not consume are config errors, not
         # silently ignored flags
         self.bound = self.engine.register(op, n, strict=True)
@@ -109,7 +111,8 @@ def run_fft_service(args) -> dict:
     rng = np.random.default_rng(0)
     svc = FFTService(args.n, args.batch, args.op,
                      modulus_bits=args.modulus_bits,
-                     model_shards=args.model_shards)
+                     model_shards=args.model_shards,
+                     auto=args.auto)
     svc.warmup()
     first: dict[int, object] = {}
 
@@ -144,15 +147,54 @@ def run_fft_service(args) -> dict:
 # Mixed-op continuous-batching engine service
 # ---------------------------------------------------------------------------
 
+def _watchdog_cfg_from_args(args):
+    from repro.ft.watchdog import WatchdogConfig
+    if (args.watchdog_threshold is None and args.watchdog_evict_after
+            is None and args.watchdog_warmup is None):
+        return None
+    base = WatchdogConfig()
+    return WatchdogConfig(
+        threshold=(base.threshold if args.watchdog_threshold is None
+                   else args.watchdog_threshold),
+        evict_after=(base.evict_after if args.watchdog_evict_after is None
+                     else args.watchdog_evict_after),
+        warmup_steps=(base.warmup_steps if args.watchdog_warmup is None
+                      else args.watchdog_warmup))
+
+
+def _arm_chaos(engine: ServeEngine, args) -> None:
+    """Deterministic straggler injection for exercising the elastic path
+    at the CLI (tests/CI): batches after --inject-straggler-after sleep
+    --inject-straggler-ms before dispatch, so the watchdog's EWMA sees a
+    consecutive run of breaches. Armed only on the FIRST generation —
+    after an elastic restart the resized engine serves cleanly."""
+    if not args.inject_straggler_ms or engine.restarts > 0:
+        return
+    counter = {"i": 0}
+
+    def make_slow(fn):
+        def slow(*a):
+            counter["i"] += 1
+            if counter["i"] > args.inject_straggler_after:
+                time.sleep(args.inject_straggler_ms / 1e3)
+            return fn(*a)
+        return slow
+
+    for bound in engine._bound.values():
+        bound.fn = make_slow(bound.fn)
+
+
 def run_engine_service(args) -> dict:
     """Serve a mixed (op, n) stream from one engine process.
 
     Buckets come from the cross product of ``--ops`` and ``--ns``; the
     process-level ``--modulus-bits`` / ``--model-shards`` context is
     narrowed per op (ops without that route stay local), so one engine can
-    serve local fft next to the distributed polymul-mod tier. One result
-    per bucket is verified against the registry's numpy oracle after the
-    drain.
+    serve local fft next to the distributed polymul-mod tier. ``--auto``
+    hands tier/packing choice per bucket to the cost model
+    (docs/planner.md) and reports predicted-vs-observed per-bucket cost.
+    One result per bucket is verified against the registry's numpy oracle
+    after the drain.
 
     With ``--snapshot-dir`` the process is preemption-safe
     (docs/fault_tolerance.md): SIGTERM stops admission, the engine drains
@@ -160,15 +202,39 @@ def run_engine_service(args) -> dict:
     + watchdog state are snapshotted through ``ft.checkpoint``; a restart
     with the same ``--snapshot-dir`` warm-restarts from the snapshot
     (buckets re-bind on the restart-time context, counters carry over).
+
+    ``--elastic`` (requires ``--snapshot-dir``) closes the watchdog loop
+    AT the CLI: an eviction drains the engine, snapshots, and
+    warm-restarts it with ``--model-shards`` halved (floor 1) — the
+    checkpoint -> resize -> restore path that previously only tests could
+    drive — then keeps serving the remaining requests.
     """
     ops = [s.strip() for s in args.ops.split(",") if s.strip()]
     ns = [int(s) for s in args.ns.split(",") if s.strip()]
     from repro.ft import checkpoint as ckpt_lib
+    from repro.launch.engine import EngineStopped
+
+    holder: dict = {"engine": None, "evicted": False}
+
+    def _on_evict(eng, batch_idx):
+        if not args.elastic:
+            return
+        holder["evicted"] = True
+        print(f"[serve:engine] watchdog evicted batch {batch_idx}: "
+              f"draining for elastic resize", flush=True)
+        # request_stop on a separate thread for the same reason as the
+        # SIGTERM handler: never take the engine's condition lock from
+        # a frame that may already hold it.
+        threading.Thread(target=eng.request_stop, daemon=True).start()
+
+    wd_cfg = _watchdog_cfg_from_args(args)
     if args.snapshot_dir and ckpt_lib.latest_step(args.snapshot_dir) \
             is not None:
         engine = ServeEngine.from_snapshot(args.snapshot_dir,
                                            model_shards=args.model_shards,
-                                           max_batch=args.batch)
+                                           max_batch=args.batch,
+                                           watchdog_cfg=wd_cfg,
+                                           on_evict=_on_evict)
         print(f"[serve:engine] warm restart #{engine.restarts} from "
               f"{args.snapshot_dir} "
               f"(lifetime served: {engine.stats(seconds=1, busy_s=1)['lifetime']['served']})")
@@ -176,7 +242,11 @@ def run_engine_service(args) -> dict:
         engine = ServeEngine(max_batch=args.batch,
                              max_pending=args.max_pending,
                              modulus_bits=args.modulus_bits,
-                             model_shards=args.model_shards)
+                             model_shards=args.model_shards,
+                             auto=args.auto,
+                             watchdog_cfg=wd_cfg,
+                             on_evict=_on_evict)
+    holder["engine"] = engine
     prev_term = None
     if args.snapshot_dir:
         import signal
@@ -189,52 +259,72 @@ def run_engine_service(args) -> dict:
             # on a SEPARATE thread: the handler executes on the main
             # thread's frame, which may be INSIDE the engine's condition
             # lock — taking it from the handler would self-deadlock.
-            threading.Thread(target=engine.request_stop,
+            threading.Thread(target=holder["engine"].request_stop,
                              daemon=True).start()
         prev_term = signal.signal(signal.SIGTERM, _on_term)
 
-    try:
+    rng = np.random.default_rng(0)
+    combos = [(op, n) for op in ops for n in ns]
+
+    def serve_round(engine: ServeEngine, n_requests: int) -> dict:
+        """One engine generation: register + warmup, produce, drain,
+        verify one result per bucket. Returns the round's stats."""
         for op in ops:
             for n in ns:
                 engine.register(op, n)
+        _arm_chaos(engine, args)
         engine.warmup()
-
-        rng = np.random.default_rng(0)
-        combos = [(op, n) for op in ops for n in ns]
         kept: dict[tuple[str, int], tuple[int, object]] = {}
 
         def producer():
-            from repro.launch.engine import EngineStopped
             try:
-                for rid in range(args.requests):
-                    op, n = combos[rid % len(combos)]
+                for i in range(n_requests):
+                    op, n = combos[i % len(combos)]
                     payload = engine.bound(op, n).random_payload(rng)
+                    rid = engine.submit(op, n, payload)
                     if (op, n) not in kept:
                         kept[(op, n)] = (rid, payload)
-                    engine.submit(op, n, payload, rid=rid)
             except EngineStopped:
-                pass  # draining toward a snapshot: shed the rest of the load
+                pass  # draining toward a snapshot: shed the rest
 
         th = threading.Thread(target=producer, daemon=True)
         th.start()
         # sync marker for supervisors/tests: warmup done, handler armed
-        print(f"[serve:engine] serving {args.requests} requests "
+        print(f"[serve:engine] serving {n_requests} requests "
               f"across {len(combos)} buckets", flush=True)
-        stats = engine.run(args.requests)
+        stats = engine.run(n_requests)
         th.join()
+        for (op, n), (rid, payload) in kept.items():
+            if rid in engine.results:   # absent only if shed in a drain
+                engine.bound(op, n).verify(payload, engine.results[rid])
+        return stats
+
+    try:
+        remaining = args.requests
+        while True:
+            holder["evicted"] = False
+            stats = serve_round(engine, remaining)
+            remaining -= stats["served"]
+            if args.elastic and holder["evicted"] and remaining > 0:
+                new_shards = max(1, engine.ctx.model_shards // 2)
+                print(f"[serve:engine] elastic restart: model_shards "
+                      f"{engine.ctx.model_shards} -> {new_shards}, "
+                      f"{remaining} requests left", flush=True)
+                engine = engine.elastic_restart(args.snapshot_dir,
+                                                model_shards=new_shards)
+                holder["engine"] = engine
+                continue
+            break
         if args.snapshot_dir:
             path = engine.snapshot(args.snapshot_dir)
             print(f"[serve:engine] snapshot -> {path}")
     finally:
         if prev_term is not None:
-            # the handler closes over THIS engine — leaving it installed
-            # would hijack SIGTERM for any later engine in the process
-            # (e.g. an in-process warm restart or the test runner itself)
+            # the handler closes over the engine holder — leaving it
+            # installed would hijack SIGTERM for any later engine in the
+            # process (e.g. an in-process warm restart or the test runner)
             import signal
             signal.signal(signal.SIGTERM, prev_term)
-    for (op, n), (rid, payload) in kept.items():
-        if rid in engine.results:   # absent only if shed during a drain
-            engine.bound(op, n).verify(payload, engine.results[rid])
 
     lat = stats["latency_ms"]
     print(f"[serve:engine] buckets={len(stats['buckets'])} "
@@ -244,10 +334,15 @@ def run_engine_service(args) -> dict:
           f"p50={lat['p50']:.2f}ms p90={lat['p90']:.2f}ms "
           f"p99={lat['p99']:.2f}ms")
     for name, b in stats["buckets"].items():
+        pred = b.get("predicted_s_per_req")
+        # predictions span ns (tiny local XLA) to ms (PIM waves): 3 sig figs
+        cost = (f" predicted={pred * 1e6:.3g}us/req "
+                f"({b['predicted_tier']}/{b['predicted_backend']})"
+                if pred is not None else "")
         print(f"[serve:engine]   {name} route={b['route']} "
               f"served={b['served']} batches={b['batches']} "
               f"mean_batch={b['mean_batch']:.1f} "
-              f"utilization={b['utilization']:.2f}")
+              f"utilization={b['utilization']:.2f}{cost}")
     return stats
 
 
@@ -320,6 +415,31 @@ def main(argv=None):
                         "model_shards",
                         "shard the sequence over this many devices via "
                         "the distributed four-step NTT/FFT tiers"))
+    ap.add_argument("--auto", action="store_true",
+                    help="cost-model auto-tiering (docs/planner.md): the "
+                         "planner chooses tier and packing per bucket; "
+                         "--model-shards becomes the AVAILABLE device "
+                         "count, and stats report predicted-vs-observed "
+                         "per-bucket cost")
+    ap.add_argument("--elastic", action="store_true",
+                    help="engine service: on a watchdog eviction, drain + "
+                         "snapshot + warm-restart with --model-shards "
+                         "halved (requires --snapshot-dir)")
+    ap.add_argument("--watchdog-threshold", type=float, default=None,
+                    help="engine service: straggler threshold (x EWMA)")
+    ap.add_argument("--watchdog-evict-after", type=int, default=None,
+                    help="engine service: consecutive breaches before "
+                         "eviction")
+    ap.add_argument("--watchdog-warmup", type=int, default=None,
+                    help="engine service: EWMA warmup batches")
+    ap.add_argument("--inject-straggler-ms", type=float, default=0.0,
+                    help="chaos: sleep this long before each dispatch "
+                         "after --inject-straggler-after batches "
+                         "(first engine generation only; drives the "
+                         "--elastic path deterministically in tests)")
+    ap.add_argument("--inject-straggler-after", type=int, default=0,
+                    help="chaos: batches served cleanly before the "
+                         "injected straggling starts")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -327,6 +447,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.ns is None:
         args.ns = str(args.n)
+    if args.elastic and not args.snapshot_dir:
+        ap.error("--elastic requires --snapshot-dir (the eviction path "
+                 "is snapshot -> resize -> restore)")
     try:
         if args.service == "fft":
             return run_fft_service(args)

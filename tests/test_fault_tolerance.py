@@ -40,7 +40,7 @@ import jax.numpy as jnp
 from conftest import REPO, SRC, run_in_subprocess_devices
 from repro.ft import checkpoint as ckpt_lib
 from repro.ft.watchdog import StepWatchdog, WatchdogConfig
-from repro.launch.engine import EngineStopped, ServeEngine
+from repro.launch.engine import LATENCY_WINDOW, EngineStopped, ServeEngine
 
 sys.path.insert(0, REPO)
 from benchmarks import trajectory  # noqa: E402
@@ -244,6 +244,67 @@ def test_engine_warm_restart_carries_lifetime(rng, tmp_path):
     eng3 = ServeEngine.from_snapshot(d)
     assert eng3.restarts == 2
     assert eng3._prev_served == 8
+
+
+def test_engine_snapshot_latency_record_plateaus(rng, tmp_path):
+    """Regression: the snapshot used to persist the FULL per-request
+    latency record, and every warm restart re-loaded and re-extended it —
+    a long-lived restart loop grew the snapshot payload (and the
+    percentile input) without bound. The snapshot now keeps only the most
+    recent ``LATENCY_WINDOW`` samples, so across restart generations the
+    persisted record PLATEAUS at the window size instead of growing."""
+    d = str(tmp_path)
+    engine = ServeEngine(max_batch=4, max_pending=64)
+    engine.register("fft", 64)
+    sizes = []
+    for _ in range(3):
+        engine.submit("fft", 64, _cx(rng))
+        engine.run(1)
+        # a long generation: far more samples than the window retains
+        engine._latencies_s.extend([1e-4] * (LATENCY_WINDOW + 500))
+        engine.request_stop()
+        engine.run(10_000)
+        engine.snapshot(d)
+        engine = ServeEngine.from_snapshot(d)
+        sizes.append(len(engine._prev_latencies_s))
+    # every generation added ~LATENCY_WINDOW+501 samples; unbounded growth
+    # would show ~3x the window by now
+    assert sizes == [LATENCY_WINDOW] * 3
+    # and the restarted engine still reports percentiles over the carry
+    engine.submit("fft", 64, _cx(rng))
+    stats = engine.run(1)
+    assert stats["latency_ms"]["p50"] > 0
+
+
+def test_cli_engine_elastic_resize(tmp_path):
+    """--elastic end to end in a subprocess: injected stragglers trip the
+    watchdog, the CLI drains + snapshots + warm-restarts the engine with
+    --model-shards halved, and the second generation (chaos is armed only
+    on the first) serves the remaining requests to completion.
+    --max-pending is deliberately small so the producer still holds
+    unsubmitted load when the eviction drain sheds it — the
+    ``remaining > 0`` restart branch is the one under test."""
+    d = str(tmp_path / "snap")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--service", "engine",
+         "--ops", "fft", "--ns", "64", "--requests", "48", "--batch", "4",
+         "--max-pending", "8", "--model-shards", "8",
+         "--snapshot-dir", d, "--elastic",
+         "--watchdog-threshold", "2.0", "--watchdog-evict-after", "2",
+         "--watchdog-warmup", "2",
+         "--inject-straggler-ms", "300", "--inject-straggler-after", "3"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stdout + res.stderr
+    out = res.stdout
+    assert "watchdog evicted batch" in out, out
+    assert "elastic restart: model_shards 8 -> 4" in out, out
+    # the full stream was served across both generations, and the final
+    # snapshot records the elastic restart in the lifetime counters
+    eng = ServeEngine.from_snapshot(d)
+    assert eng._prev_served == 48
+    assert eng.restarts == 2          # elastic + this from_snapshot
 
 
 def test_engine_from_snapshot_rejects_foreign_checkpoint(tmp_path):
