@@ -372,6 +372,10 @@ REAL_COMPLEX_CYCLE_GATE = 0.65  # per-product simulated-cycle ratio ceiling
 # per real-sequence pair. The per-shard Hermitian split keeps the
 # half-spectrum off the wire at full width: 3.5 vs 6 block-units ~ 0.583.
 DIST_REAL_COMPLEX_BYTE_GATE = 0.6
+# ABFT integrity check (ft/abft.py): simulated check cycles over the
+# batch=2 transform it verifies. Measured 0.04-0.19 across the op grid;
+# the gate holds the check CHEAP relative to the work it guards.
+ABFT_OVERHEAD_GATE = 0.25
 
 
 def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
@@ -484,6 +488,29 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
     records.append({"op": "dist-real-bytes", "n": nd, "batch": Bd,
                     "byte_ratio": dist_ratios})
 
+    # ABFT verified-mode overhead: for every checkable workload, the
+    # simulated cycles of one integrity check (charged on a live sim —
+    # asserted equal to the closed form, so the planner prices exactly
+    # what the sim counts) over the batch=2 transform it verifies.
+    # Deterministic, ratcheted, and absolutely gated at ABFT_OVERHEAD_GATE.
+    from repro.core import cost as cost_lib
+    from repro.core.pim import INT32, CrossbarSim
+    from repro.ft import abft
+    abft_ratios = {}
+    for wl in sorted(abft.CHECKS):
+        for n in (1024, 4096):
+            spec = INT32 if wl == "polymul-mod" else FP32
+            sim = CrossbarSim(FOURIERPIM_8, spec)
+            abft.charge_check(sim, wl, n)
+            check = sim.ctr.cycles
+            assert check == cost_lib.abft_check_cycles(wl, n), \
+                f"{wl}/n={n}: sim-charged check diverged from closed form"
+            base = cost_lib.pim_local_unit_cycles(wl, n, batch=2)
+            abft_ratios[f"{wl}/n={n}"] = check / base
+            emit(f"smoke/abft_overhead/{wl}/n={n}", 0.0,
+                 f"ratio={check / base:.3f};gate<={ABFT_OVERHEAD_GATE}")
+    records.append({"op": "abft-overhead", "ratios": abft_ratios})
+
     # Continuous-batching serve engine: mixed-op stream through the op
     # registry; per-request p50/p99 and bucket utilization land in the
     # trajectory artifact (no latency gate — shared runners — but a served
@@ -504,12 +531,14 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
     baseline = trajectory.load(path)
     fresh = {"real_complex_cycle_ratio": ratios,
              "dist_real_complex_byte_ratio": dist_ratios,
+             "abft_overhead_ratio": abft_ratios,
              "auto_plan": auto_record,
              "records": records}
     violations = trajectory.compare(baseline, fresh) if baseline else []
     cycle_ok = all(r <= REAL_COMPLEX_CYCLE_GATE for r in ratios.values())
     bytes_ok = all(r <= DIST_REAL_COMPLEX_BYTE_GATE
                    for r in dist_ratios.values())
+    abft_ok = all(r <= ABFT_OVERHEAD_GATE for r in abft_ratios.values())
     # Timing sanity with slack for loaded shared runners (the observed
     # speedup is 1.5-2x; the deterministic regression gates are the ratio
     # gates above, so this only catches a grossly slower real path).
@@ -521,6 +550,7 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
         "records": records,
         "real_complex_cycle_ratio": ratios,
         "dist_real_complex_byte_ratio": dist_ratios,
+        "abft_overhead_ratio": abft_ratios,
         "auto_plan": auto_record,
         "serve": {"p50_ms": serve_record["serve_p50_ms"],
                   "p99_ms": serve_record["serve_p99_ms"],
@@ -529,15 +559,18 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
         "gate": {"max_real_complex_cycle_ratio": REAL_COMPLEX_CYCLE_GATE,
                  "max_dist_real_complex_byte_ratio":
                      DIST_REAL_COMPLEX_BYTE_GATE,
+                 "max_abft_overhead_ratio": ABFT_OVERHEAD_GATE,
                  "cycle_ratio_pass": cycle_ok,
                  "dist_byte_ratio_pass": bytes_ok,
+                 "abft_overhead_pass": abft_ok,
                  "wallclock_pass": wallclock_ok,
                  "auto_plan_agreement_pass": auto_ok,
                  "ratchet_slack": trajectory.RATCHET_SLACK,
                  "trajectory_pass": not violations,
                  "trajectory_violations": violations,
-                 "pass": (cycle_ok and bytes_ok and wallclock_ok
-                          and auto_ok and not violations)},
+                 "pass": (cycle_ok and bytes_ok and abft_ok
+                          and wallclock_ok and auto_ok
+                          and not violations)},
     }
     out["history"] = trajectory.extend_history(baseline, out)
     with open(path, "w") as f:
@@ -549,6 +582,9 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
         f"real/complex polymul cycle ratio regressed: {ratios}"
     assert bytes_ok, \
         f"distributed real/complex byte ratio regressed: {dist_ratios}"
+    assert abft_ok, \
+        f"ABFT check overhead exceeds {ABFT_OVERHEAD_GATE:.0%} of the " \
+        f"transform it verifies: {abft_ratios}"
     assert wallclock_ok, \
         f"real path grossly slower than complex in interpret mode: " \
         f"{us_real:.0f}us vs {us_cplx:.0f}us"

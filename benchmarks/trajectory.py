@@ -65,6 +65,10 @@ def deterministic_metrics(bench: dict) -> dict[str, tuple[float, str]]:
         out[f"real_complex_cycle_ratio/n={n}"] = (float(v), "min")
     for op, v in (bench.get("dist_real_complex_byte_ratio") or {}).items():
         out[f"dist_real_complex_byte_ratio/{op}"] = (float(v), "min")
+    for key, v in (bench.get("abft_overhead_ratio") or {}).items():
+        # simulated ABFT check cycles / verified transform cycles: a rise
+        # means integrity got more expensive relative to the work it guards
+        out[f"abft_overhead_ratio/{key}"] = (float(v), "min")
     ap = bench.get("auto_plan") or {}
     if "agreement" in ap:
         # predicted-vs-measured tier agreement of the auto planner:

@@ -255,9 +255,16 @@ def _xla_collective_bytes(workload: str, n: int, batch: int,
 
 
 def xla_cost(workload: str, n: int, batch: int, *, tier: str,
-             n_devices: int = 1, real: bool = False) -> TierCost:
+             n_devices: int = 1, real: bool = False,
+             verified: bool = False) -> TierCost:
     exact = workload == "polymul-mod"
     flops, nbytes = _xla_local_terms(workload, n, max(batch, 1), real=real)
+    if verified:
+        # Host-side integrity check (ft/abft.py): O(n) reductions over
+        # each operand/result row plus one more pass over the result.
+        ops = {"fft": 2, "rfft": 2}.get(workload, 3)
+        flops += max(batch, 1) * ops * 4.0 * n
+        nbytes += max(batch, 1) * n * 8
     if tier == "distributed":
         flops /= n_devices
         nbytes /= n_devices
@@ -278,6 +285,19 @@ def xla_cost(workload: str, n: int, batch: int, *, tier: str,
 # ---------------------------------------------------------------------------
 # PIM cost-twin estimates
 # ---------------------------------------------------------------------------
+
+def abft_check_cycles(workload: str, n: int, *,
+                      cfg: PIMConfig = _PIM_CFG) -> int:
+    """Closed-form cycles of one ABFT integrity check (ft/abft.py) at the
+    planner's default device model — the quantity ``verified=True``
+    pricing adds per work unit, and the counter-parity gate pins against
+    ``abft.charge_check`` on a live sim. Lazy import: abft pulls the
+    crossbar stack, and this module is imported by the planner on every
+    bind — the check cost is only computed on verified paths."""
+    from repro.ft import abft
+    spec = _INT if workload == "polymul-mod" else _FP
+    return abft.check_cycles(workload, n, cfg, spec)
+
 
 def pim_local_unit_cycles(workload: str, n: int, *, batch: int = 2,
                           cfg: PIMConfig = _PIM_CFG) -> int:
@@ -394,17 +414,26 @@ def _pim_units(workload: str, batch: int, *, real: bool) -> int:
 
 def pim_cost(workload: str, n: int, batch: int, *, tier: str,
              n_devices: int = 1, real: bool = False,
+             verified: bool = False,
              cfg: PIMConfig = _PIM_CFG) -> TierCost:
     exact = workload == "polymul-mod"
     batch = max(batch, 1)
     wl = _pim_workload(workload, real)
+    check = abft_check_cycles(wl, n, cfg=cfg) if verified else 0
     if tier == "local":
         unit_cycles = pim_local_unit_cycles(wl, n, batch=batch, cfg=cfg)
         t = batch / _pim_local_throughput(wl, n, cfg)
+        if verified:
+            # The check rides the same vectored column ops as the
+            # transform (batch rows in parallel), so throughput scales by
+            # the per-unit cycle stretch — the closed-form overhead the
+            # BENCH abft_overhead_ratio gate pins.
+            t *= (unit_cycles + check) / unit_cycles
+            unit_cycles += check
         return TierCost(tier="local", backend="pim", real=real, exact=exact,
                         seq_shards=1, total_s=t, t_compute_s=t,
                         pim_cycles=unit_cycles)
-    unit_cycles = pim_dist_unit_cycles(wl, n, n_devices, cfg=cfg)
+    unit_cycles = pim_dist_unit_cycles(wl, n, n_devices, cfg=cfg) + check
     unit_bytes = pim_dist_unit_bytes(wl, n, n_devices)
     units = _pim_units(workload, batch, real=real)
     if workload == "polymul-real" and real:
@@ -438,8 +467,16 @@ def _packings(workload: str) -> list[bool]:
 def workload_cost(workload: str, n: int, batch: int, *,
                   n_devices: int = 1,
                   tiers: tuple[str, ...] = ("local", "distributed"),
-                  packings: list[bool] | None = None) -> dict:
+                  packings: list[bool] | None = None,
+                  verified: bool = False, pim_ok: bool = True) -> dict:
     """Score every executable (tier, packing) candidate on both backends.
+
+    ``verified=True`` prices the ABFT integrity check on every backend
+    (``abft_check_cycles`` on PIM, the O(n) host reductions on XLA) so a
+    verified serve bucket's predicted costs include the checksum
+    overhead. ``pim_ok=False`` marks the PIM backend infeasible on every
+    candidate — the serve engine's circuit breaker quarantining a faulty
+    array re-plans with the PIM placement off the table.
 
     Returns a machine-readable breakdown::
 
@@ -476,16 +513,21 @@ def workload_cost(workload: str, n: int, batch: int, *,
                 continue
             backends = {}
             xc = xla_cost(workload, n, batch, tier=tier,
-                          n_devices=n_devices, real=real)
+                          n_devices=n_devices, real=real,
+                          verified=verified)
             backends["xla"] = xc.as_dict()
-            if tier == "local":
+            if not pim_ok:
+                pim_bad = ("quarantined (circuit breaker): pim backend "
+                           "disabled for this bucket")
+            elif tier == "local":
                 pim_bad = pim_local_infeasible(
                     _pim_workload(workload, real), n)
             else:
                 pim_bad = pim_dist_infeasible(n, n_devices)
             if pim_bad is None:
                 pc = pim_cost(workload, n, batch, tier=tier,
-                              n_devices=n_devices, real=real)
+                              n_devices=n_devices, real=real,
+                              verified=verified)
                 backends["pim"] = pc.as_dict()
                 best_backend = ("pim" if pc.total_s <= xc.total_s
                                 else "xla")

@@ -73,7 +73,8 @@ _MAX_LOCAL_N_REAL = _MAX_LOCAL_N                   # = 256K points
 def plan(n: int, batch: int, *, model_shards: int = 1,
          exact: bool = False, real: bool = False,
          force_distributed: bool = False,
-         workload: str | None = None) -> FFTPlan:
+         workload: str | None = None,
+         verified: bool = False, pim_ok: bool = True) -> FFTPlan:
     """Execution plan for a batch of n-point transforms.
 
     ``exact=True`` routes to the modular-NTT tier (uint32 residues, radix-2
@@ -104,6 +105,11 @@ def plan(n: int, batch: int, *, model_shards: int = 1,
     candidate raises ValueError naming every pruned candidate's
     constraint (VMEM ceiling, ``D^2 | n`` tiling, ``2*D^2 | n`` for the
     ordered real tier) instead of a bare error.
+    ``verified=True`` (auto mode only) prices the ABFT integrity check
+    (``core.cost.abft_check_cycles``) into every candidate on both
+    backends; ``pim_ok=False`` plans with the PIM backend off the table —
+    the circuit-breaker re-bind of a quarantined serve bucket
+    (docs/fault_tolerance.md).
     Raises ValueError on non-power-of-two n so misuse fails loudly instead
     of silently mis-planning (asserts vanish under ``python -O``).
     """
@@ -119,7 +125,8 @@ def plan(n: int, batch: int, *, model_shards: int = 1,
     if workload is not None:
         return _plan_auto(n, batch, workload, model_shards,
                           exact=exact, real=real,
-                          force_distributed=force_distributed)
+                          force_distributed=force_distributed,
+                          verified=verified, pim_ok=pim_ok)
     if exact:
         if not force_distributed and (n <= _MAX_LOCAL_N_EXACT
                                       or model_shards == 1):
@@ -165,8 +172,8 @@ def plan(n: int, batch: int, *, model_shards: int = 1,
 
 
 def _plan_auto(n: int, batch: int, workload: str, model_shards: int, *,
-               exact: bool, real: bool,
-               force_distributed: bool) -> FFTPlan:
+               exact: bool, real: bool, force_distributed: bool,
+               verified: bool = False, pim_ok: bool = True) -> FFTPlan:
     """Cost-model-driven tier choice (docs/planner.md).
 
     The candidate space is every (tier, packing) pair the XLA kernels can
@@ -195,7 +202,8 @@ def _plan_auto(n: int, batch: int, workload: str, model_shards: int, *,
              else ("local", "distributed"))
     packings = [True] if real else None
     breakdown = workload_cost(workload, n, batch, n_devices=model_shards,
-                              tiers=tiers, packings=packings)
+                              tiers=tiers, packings=packings,
+                              verified=verified, pim_ok=pim_ok)
     best = breakdown["best"]
     if best is None:
         lines = [

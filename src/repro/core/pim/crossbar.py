@@ -57,7 +57,8 @@ class CrossbarSim:
     is charged before the first butterfly in every layout), not just totals.
     """
 
-    def __init__(self, cfg: PIMConfig, spec):
+    def __init__(self, cfg: PIMConfig, spec, *, faults=None,
+                 array_id: int = 0):
         self.cfg = cfg
         self.spec = spec
         self.word_bits = aritpim.storage_word_bits(spec)
@@ -65,6 +66,14 @@ class CrossbarSim:
         self.values = np.zeros((cfg.crossbar_rows, self.slots), np.complex128)
         self.ctr = Counters()
         self.log: list[tuple[str, int]] = []
+        # Fault hook (core/pim/faults.py): resolved ONCE at construction so
+        # the common fault-free path costs a single ``is None`` check per
+        # butterfly — zero overhead when disabled.
+        self.array_id = array_id
+        self.faults = (faults.for_array(array_id)
+                       if faults is not None else None)
+        self._fault_rng = (faults.rng_for(array_id, salt=1)
+                           if self.faults is not None else None)
 
     # -- cost charging ------------------------------------------------------
     def charge_column_op(self, op: str, active_rows: int, serial: int = 1):
@@ -110,7 +119,10 @@ class CrossbarSim:
         """
         t = w * v
         self.charge_column_op("butterfly", active_rows, serial=serial_units)
-        return u + t, u - t
+        hi, lo = u + t, u - t
+        if self.faults is not None:
+            hi, lo = self._inject_float(hi, lo)
+        return hi, lo
 
     def butterfly_rows_mod(self, u: np.ndarray, v: np.ndarray, w: np.ndarray,
                            q: int, active_rows: int, serial_units: int = 1):
@@ -120,4 +132,70 @@ class CrossbarSim:
         qq = np.uint64(q)
         t = (w * v) % qq
         self.charge_column_op("butterfly", active_rows, serial=serial_units)
-        return (u + t) % qq, (u + qq - t) % qq
+        hi, lo = (u + t) % qq, (u + qq - t) % qq
+        if self.faults is not None:
+            hi, lo = self._inject_mod(hi, lo, qq)
+        return hi, lo
+
+    # -- fault injection (core/pim/faults.py; ledger entries cost 0) --------
+    def _fault_log(self, kind: str) -> None:
+        self.log.append((f"fault:{kind}:a{self.array_id}", 0))
+
+    def _transient_fires(self) -> bool:
+        """Per-op transient coin: p = 1 - (1-rate)^gates for the gates the
+        butterfly just charged (the last log entry's cycles x its rows are
+        folded into one op-level draw — bit-level gates are costs here,
+        not simulated state, so the flip lands on one stored value)."""
+        f = self.faults
+        if f.bitflip_per_gate <= 0.0:
+            return False
+        gates = self.log[-1][1] * max(1, self.cfg.crossbar_rows // 2)
+        p = 1.0 - (1.0 - f.bitflip_per_gate) ** gates
+        return bool(self._fault_rng.random() < p)
+
+    def _inject_float(self, hi: np.ndarray, lo: np.ndarray):
+        f = self.faults
+        hv, lv = hi.reshape(-1), lo.reshape(-1)
+        if f.dead:
+            hv[:] = 0.0
+            lv[:] = 0.0
+            self._fault_log("dead")
+            return hi, lo
+        for pos, val in zip(f.stuck_pos, f.stuck_val):
+            tgt = hv if (pos >> 1) % 2 == 0 else lv
+            forced = 1.0 if val else 0.0
+            i = pos % tgt.size
+            if tgt[i] != forced:
+                tgt[i] = forced
+                self._fault_log("stuck")
+        if self._transient_fires():
+            tgt = hv if self._fault_rng.random() < 0.5 else lv
+            i = int(self._fault_rng.integers(0, tgt.size))
+            tgt[i] *= 2.0           # exponent-bit flip: magnitude doubles
+            self._fault_log("flip")
+        return hi, lo
+
+    def _inject_mod(self, hi: np.ndarray, lo: np.ndarray, qq: np.uint64):
+        f = self.faults
+        hv, lv = hi.reshape(-1), lo.reshape(-1)
+        if f.dead:
+            hv[:] = np.uint64(0)
+            lv[:] = np.uint64(0)
+            self._fault_log("dead")
+            return hi, lo
+        for pos, val, bit in zip(f.stuck_pos, f.stuck_val, f.stuck_bit):
+            tgt = hv if (pos >> 1) % 2 == 0 else lv
+            i = pos % tgt.size
+            mask = np.uint64(1 << bit)
+            forced = ((tgt[i] | mask) if val
+                      else (tgt[i] & ~mask)) % qq
+            if forced != tgt[i]:
+                tgt[i] = forced
+                self._fault_log("stuck")
+        if self._transient_fires():
+            tgt = hv if self._fault_rng.random() < 0.5 else lv
+            i = int(self._fault_rng.integers(0, tgt.size))
+            bit = int(self._fault_rng.integers(0, 20))
+            tgt[i] = (tgt[i] ^ np.uint64(1 << bit)) % qq
+            self._fault_log("flip")
+        return hi, lo

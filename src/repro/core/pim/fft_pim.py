@@ -100,11 +100,12 @@ def _fft_groups(sim: CrossbarSim, x: np.ndarray, *, inverse: bool,
 
 
 def r_fft(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
-          *, inverse: bool = False, charge_perm: bool = True) -> PIMFFTResult:
+          *, inverse: bool = False, charge_perm: bool = True,
+          faults=None, array_id: int = 0) -> PIMFFTResult:
     """r-configuration (§4.3): n = crossbar rows, one element per row."""
     n = len(x)
     assert n == cfg.crossbar_rows, f"r-FFT needs n == rows ({cfg.crossbar_rows})"
-    sim = CrossbarSim(cfg, spec)
+    sim = CrossbarSim(cfg, spec, faults=faults, array_id=array_id)
     sim.load(x)
     if charge_perm:
         sim.charge_row_ops(_perm_swap_count(n), cycles_per_row=6, tag="perm")
@@ -123,12 +124,13 @@ def r_fft(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
 
 
 def fft_2r(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
-           *, inverse: bool = False, charge_perm: bool = True) -> PIMFFTResult:
+           *, inverse: bool = False, charge_perm: bool = True,
+           faults=None, array_id: int = 0) -> PIMFFTResult:
     """2r-configuration (§4.4): two elements per row (snake), full-row use."""
     n = len(x)
     r = cfg.crossbar_rows
     assert n == 2 * r, f"2r-FFT needs n == 2*rows ({2 * r})"
-    sim = CrossbarSim(cfg, spec)
+    sim = CrossbarSim(cfg, spec, faults=faults, array_id=array_id)
     sim.load(x)
     if charge_perm:
         sim.charge_row_ops(_perm_swap_count(n), cycles_per_row=6, tag="perm")
@@ -147,8 +149,8 @@ def fft_2r(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
 
 
 def fft_2rbeta(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
-               *, inverse: bool = False,
-               charge_perm: bool = True) -> PIMFFTResult:
+               *, inverse: bool = False, charge_perm: bool = True,
+               faults=None, array_id: int = 0) -> PIMFFTResult:
     """2r-beta configuration (§4.5): 2*beta elements per row across beta
     column-units; butterflies serial over units, ceil(beta/p) with
     partitions [25]."""
@@ -160,7 +162,7 @@ def fft_2rbeta(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
     need = cfg.crossbars_per_fft(n, word)
     assert need <= 1.0 + 1e-9 or beta <= cfg.crossbar_cols // (2 * word), \
         f"n={n} exceeds crossbar width (footnote 7)"
-    sim = CrossbarSim(cfg, spec)
+    sim = CrossbarSim(cfg, spec, faults=faults, array_id=array_id)
     serial = math.ceil(beta / cfg.partitions)
     if charge_perm:
         # Input bit-reversal happens BEFORE the group loop, exactly as in
@@ -188,15 +190,17 @@ def fft_2rbeta(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
 
 
 def pim_fft(x: np.ndarray, cfg: PIMConfig, spec: aritpim.FloatSpec,
-            *, inverse: bool = False, charge_perm: bool = True
-            ) -> PIMFFTResult:
+            *, inverse: bool = False, charge_perm: bool = True,
+            faults=None, array_id: int = 0) -> PIMFFTResult:
     """Dispatch to the layout the paper uses for this n (§6: 2K..16K -> 2r,
     2r*2, 2r*4, 2r*8)."""
     n = len(x)
     r = cfg.crossbar_rows
     if n == r:
-        return r_fft(x, cfg, spec, inverse=inverse, charge_perm=charge_perm)
-    return fft_2rbeta(x, cfg, spec, inverse=inverse, charge_perm=charge_perm)
+        return r_fft(x, cfg, spec, inverse=inverse, charge_perm=charge_perm,
+                     faults=faults, array_id=array_id)
+    return fft_2rbeta(x, cfg, spec, inverse=inverse, charge_perm=charge_perm,
+                      faults=faults, array_id=array_id)
 
 
 # ---------------------------------------------------------------------------
@@ -234,8 +238,8 @@ class PIMRFFTResult:
 
 
 def pim_rfft(x: np.ndarray, y: np.ndarray, cfg: PIMConfig,
-             spec: aritpim.FloatSpec, *, charge_perm: bool = True
-             ) -> PIMRFFTResult:
+             spec: aritpim.FloatSpec, *, charge_perm: bool = True,
+             faults=None, array_id: int = 0) -> PIMRFFTResult:
     """Half-spectra of TWO real sequences via ONE packed complex FFT.
 
     The crossbar holds z = x + i y (the imag plane stores the second
@@ -250,7 +254,8 @@ def pim_rfft(x: np.ndarray, y: np.ndarray, cfg: PIMConfig,
     beta = max(1, n // (2 * cfg.crossbar_rows))
     serial = math.ceil(beta / cfg.partitions)
     z = np.asarray(x, np.float64) + 1j * np.asarray(y, np.float64)
-    fz = pim_fft(z, cfg, spec, charge_perm=charge_perm)
+    fz = pim_fft(z, cfg, spec, charge_perm=charge_perm,
+                 faults=faults, array_id=array_id)
     sim = CrossbarSim(cfg, spec)
     unpack = realpack_unpack_cycles(cfg, spec)
     sim.ctr.cycles += unpack * serial

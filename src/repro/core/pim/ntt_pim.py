@@ -79,11 +79,12 @@ def _ntt_groups(sim: CrossbarSim, x: np.ndarray, params: NTTParams, *,
 
 def r_ntt(x: np.ndarray, params: NTTParams, cfg: PIMConfig,
           spec: aritpim.IntSpec, *, inverse: bool = False,
-          charge_perm: bool = True) -> PIMNTTResult:
+          charge_perm: bool = True, faults=None,
+          array_id: int = 0) -> PIMNTTResult:
     """r-configuration: n = crossbar rows, one residue per row."""
     n = params.n
     assert n == cfg.crossbar_rows, f"r-NTT needs n == rows ({cfg.crossbar_rows})"
-    sim = CrossbarSim(cfg, spec)
+    sim = CrossbarSim(cfg, spec, faults=faults, array_id=array_id)
     sim.load(_residues(x, params.q).astype(np.float64))
     if charge_perm:
         sim.charge_row_ops(_perm_swap_count(n), cycles_per_row=6, tag="perm")
@@ -101,12 +102,13 @@ def r_ntt(x: np.ndarray, params: NTTParams, cfg: PIMConfig,
 
 def ntt_2r(x: np.ndarray, params: NTTParams, cfg: PIMConfig,
            spec: aritpim.IntSpec, *, inverse: bool = False,
-           charge_perm: bool = True) -> PIMNTTResult:
+           charge_perm: bool = True, faults=None,
+           array_id: int = 0) -> PIMNTTResult:
     """2r-configuration: two residues per row (snake), full-row use."""
     n = params.n
     r = cfg.crossbar_rows
     assert n == 2 * r, f"2r-NTT needs n == 2*rows ({2 * r})"
-    sim = CrossbarSim(cfg, spec)
+    sim = CrossbarSim(cfg, spec, faults=faults, array_id=array_id)
     sim.load(_residues(x, params.q).astype(np.float64))
     if charge_perm:
         sim.charge_row_ops(_perm_swap_count(n), cycles_per_row=6, tag="perm")
@@ -124,7 +126,8 @@ def ntt_2r(x: np.ndarray, params: NTTParams, cfg: PIMConfig,
 
 def ntt_2rbeta(x: np.ndarray, params: NTTParams, cfg: PIMConfig,
                spec: aritpim.IntSpec, *, inverse: bool = False,
-               charge_perm: bool = True) -> PIMNTTResult:
+               charge_perm: bool = True, faults=None,
+               array_id: int = 0) -> PIMNTTResult:
     """2r-beta configuration: 2*beta residues per row across beta
     column-units; butterflies serial over units, ceil(beta/p) with
     partitions."""
@@ -135,7 +138,7 @@ def ntt_2rbeta(x: np.ndarray, params: NTTParams, cfg: PIMConfig,
     word = spec.word_bits
     assert 2 * beta * word <= cfg.crossbar_cols, \
         f"n={n} exceeds crossbar width"
-    sim = CrossbarSim(cfg, spec)
+    sim = CrossbarSim(cfg, spec, faults=faults, array_id=array_id)
     serial = math.ceil(beta / cfg.partitions)
     if charge_perm:
         # Charged BEFORE the group loop, same placement as r/2r (the
@@ -159,18 +162,22 @@ def ntt_2rbeta(x: np.ndarray, params: NTTParams, cfg: PIMConfig,
 
 def pim_ntt(x: np.ndarray, params: NTTParams, cfg: PIMConfig,
             spec: aritpim.IntSpec, *, inverse: bool = False,
-            charge_perm: bool = True) -> PIMNTTResult:
+            charge_perm: bool = True, faults=None,
+            array_id: int = 0) -> PIMNTTResult:
     """Dispatch to the layout for this n, mirroring ``fft_pim.pim_fft``."""
     if params.n == cfg.crossbar_rows:
         return r_ntt(x, params, cfg, spec, inverse=inverse,
-                     charge_perm=charge_perm)
+                     charge_perm=charge_perm, faults=faults,
+                     array_id=array_id)
     return ntt_2rbeta(x, params, cfg, spec, inverse=inverse,
-                      charge_perm=charge_perm)
+                      charge_perm=charge_perm, faults=faults,
+                      array_id=array_id)
 
 
 def pim_ntt_polymul(a: np.ndarray, b: np.ndarray, params: NTTParams,
                     cfg: PIMConfig, spec: aritpim.IntSpec, *,
-                    negacyclic: bool = True) -> PIMNTTResult:
+                    negacyclic: bool = True, faults=None,
+                    array_id: int = 0) -> PIMNTTResult:
     """Exact polynomial product mod (x^n ± 1, q) on the simulator.
 
     Negacyclic: psi-twist both operands (2 modmuls), transform without the
@@ -189,11 +196,14 @@ def pim_ntt_polymul(a: np.ndarray, b: np.ndarray, params: NTTParams,
         bt = (bt * psi_pow) % q
         sim.charge_column_op("modmul", cfg.crossbar_rows, serial=serial)
         sim.charge_column_op("modmul", cfg.crossbar_rows, serial=serial)
-    fa = pim_ntt(at, params, cfg, spec, charge_perm=False)
-    fb = pim_ntt(bt, params, cfg, spec, charge_perm=False)
+    fa = pim_ntt(at, params, cfg, spec, charge_perm=False,
+                 faults=faults, array_id=array_id)
+    fb = pim_ntt(bt, params, cfg, spec, charge_perm=False,
+                 faults=faults, array_id=array_id)
     prod = (fa.output * fb.output) % q
     sim.charge_column_op("modmul", cfg.crossbar_rows, serial=serial)
-    inv = pim_ntt(prod, params, cfg, spec, inverse=True, charge_perm=False)
+    inv = pim_ntt(prod, params, cfg, spec, inverse=True, charge_perm=False,
+                  faults=faults, array_id=array_id)
     out = inv.output
     if negacyclic:
         out = (out * params.powers(params.psi_inv)) % q
@@ -203,7 +213,12 @@ def pim_ntt_polymul(a: np.ndarray, b: np.ndarray, params: NTTParams,
         + sim.ctr.cycles,
         gates=fa.counters.gates + fb.counters.gates + inv.counters.gates
         + sim.ctr.gates)
-    return PIMNTTResult(output=out, counters=ctr)
+    # Concatenated ledger (transforms, then the pointwise/twist charges):
+    # fault entries from the sub-transforms survive into the composite
+    # result, so callers can audit which array misbehaved.
+    return PIMNTTResult(output=out, counters=ctr,
+                        log=tuple(fa.log) + tuple(fb.log) + tuple(inv.log)
+                        + tuple(sim.log))
 
 
 # ---------------------------------------------------------------------------
@@ -311,7 +326,8 @@ class PIMRNSResult:
 
 
 def pim_rns_polymul(a, b, rns, cfg: PIMConfig, spec: aritpim.IntSpec, *,
-                    negacyclic: bool = True, mesh=None) -> PIMRNSResult:
+                    negacyclic: bool = True, mesh=None,
+                    faults=None) -> PIMRNSResult:
     """Multi-limb exact polymul mod Q on the simulator: each limb is one
     independent single-word ``pim_ntt_polymul`` (limbs are embarrassingly
     parallel — one limb per crossbar), scheduled as waves through
@@ -324,8 +340,11 @@ def pim_rns_polymul(a, b, rns, cfg: PIMConfig, spec: aritpim.IntSpec, *,
     outs = np.empty((rns.k, rns.n), np.uint64)
     cycles = gates = 0
     for i, params in enumerate(rns.limbs):
+        # Limb i runs on (logical) array i — the wave schedule's placement
+        # — so a fault model can hit individual limbs deterministically.
         res = pim_ntt_polymul(ar[i], br[i], params, cfg, spec,
-                              negacyclic=negacyclic)
+                              negacyclic=negacyclic, faults=faults,
+                              array_id=i)
         outs[i] = res.output
         cycles += res.counters.cycles
         gates += res.counters.gates

@@ -49,17 +49,21 @@ class PIMPolymulResult:
 
 
 def pim_polymul(a: np.ndarray, b: np.ndarray, cfg: PIMConfig,
-                spec: aritpim.FloatSpec) -> PIMPolymulResult:
+                spec: aritpim.FloatSpec, *, faults=None,
+                array_id: int = 0) -> PIMPolymulResult:
     """Circular product (length n) on the simulator, complex coefficients."""
     n = len(a)
     beta = max(1, n // (2 * cfg.crossbar_rows))
     serial = math.ceil(beta / cfg.partitions)
-    fa = pim_fft(np.asarray(a), cfg, spec, charge_perm=False)
-    fb = pim_fft(np.asarray(b), cfg, spec, charge_perm=False)
+    fa = pim_fft(np.asarray(a), cfg, spec, charge_perm=False,
+                 faults=faults, array_id=array_id)
+    fb = pim_fft(np.asarray(b), cfg, spec, charge_perm=False,
+                 faults=faults, array_id=array_id)
     sim = CrossbarSim(cfg, spec)
     prod = fa.output * fb.output
     sim.charge_column_op("cmul", cfg.crossbar_rows, serial=serial)
-    inv = pim_fft(prod, cfg, spec, inverse=True, charge_perm=False)
+    inv = pim_fft(prod, cfg, spec, inverse=True, charge_perm=False,
+                  faults=faults, array_id=array_id)
     ctr = Counters(
         cycles=fa.counters.cycles + fb.counters.cycles + sim.ctr.cycles
         + inv.counters.cycles,
@@ -69,13 +73,15 @@ def pim_polymul(a: np.ndarray, b: np.ndarray, cfg: PIMConfig,
 
 
 def _real_forward_product(a: np.ndarray, b: np.ndarray, cfg: PIMConfig,
-                          spec: aritpim.FloatSpec,
-                          serial: int) -> tuple[np.ndarray, Counters]:
+                          spec: aritpim.FloatSpec, serial: int,
+                          faults=None,
+                          array_id: int = 0) -> tuple[np.ndarray, Counters]:
     """Shared front half of the real paths: packed forward FFT of
     z = a + i b, Hermitian unpack, pointwise product — returns the product
     spectrum and its counters (no inverse transform)."""
     z = np.asarray(a, np.float64) + 1j * np.asarray(b, np.float64)
-    fz = pim_fft(z, cfg, spec, charge_perm=False)
+    fz = pim_fft(z, cfg, spec, charge_perm=False,
+                 faults=faults, array_id=array_id)
     sim = CrossbarSim(cfg, spec)
     fa, fb = _hermitian_split(fz.output)
     unpack = realpack_unpack_cycles(cfg, spec)
@@ -97,7 +103,8 @@ def _pack_pair_cycles(cfg: PIMConfig, spec: aritpim.FloatSpec) -> int:
 
 
 def pim_polymul_real(a: np.ndarray, b: np.ndarray, cfg: PIMConfig,
-                     spec: aritpim.FloatSpec) -> PIMPolymulResult:
+                     spec: aritpim.FloatSpec, *, faults=None,
+                     array_id: int = 0) -> PIMPolymulResult:
     """Circular product of REAL polys via Eq. (10): one packed forward FFT
     per product, and — for batched inputs of shape (B, n) — one inverse
     transform per PAIR of products (Q = P_0 + i P_1; both product spectra
@@ -114,8 +121,10 @@ def pim_polymul_real(a: np.ndarray, b: np.ndarray, cfg: PIMConfig,
     beta = max(1, n // (2 * cfg.crossbar_rows))
     serial = math.ceil(beta / cfg.partitions)
     if a.ndim == 1:
-        prod, ctr = _real_forward_product(a, b, cfg, spec, serial)
-        inv = pim_fft(prod, cfg, spec, inverse=True, charge_perm=False)
+        prod, ctr = _real_forward_product(a, b, cfg, spec, serial,
+                                          faults=faults, array_id=array_id)
+        inv = pim_fft(prod, cfg, spec, inverse=True, charge_perm=False,
+                      faults=faults, array_id=array_id)
         return PIMPolymulResult(
             output=inv.output.real,
             counters=Counters(cycles=ctr.cycles + inv.counters.cycles,
@@ -125,14 +134,17 @@ def pim_polymul_real(a: np.ndarray, b: np.ndarray, cfg: PIMConfig,
     out = np.empty((B, n), np.float64)
     total = Counters()
     for j in range(0, B - 1, 2):
-        p0, c0 = _real_forward_product(a[j], b[j], cfg, spec, serial)
-        p1, c1 = _real_forward_product(a[j + 1], b[j + 1], cfg, spec, serial)
+        p0, c0 = _real_forward_product(a[j], b[j], cfg, spec, serial,
+                                       faults=faults, array_id=array_id)
+        p1, c1 = _real_forward_product(a[j + 1], b[j + 1], cfg, spec, serial,
+                                       faults=faults, array_id=array_id)
         sim = CrossbarSim(cfg, spec)
         pack = _pack_pair_cycles(cfg, spec)
         sim.ctr.cycles += pack * serial
         sim.ctr.gates += pack * serial * cfg.crossbar_rows
         q = p0 + 1j * p1
-        inv = pim_fft(q, cfg, spec, inverse=True, charge_perm=False)
+        inv = pim_fft(q, cfg, spec, inverse=True, charge_perm=False,
+                      faults=faults, array_id=array_id)
         out[j] = inv.output.real
         out[j + 1] = inv.output.imag
         total.cycles += (c0.cycles + c1.cycles + sim.ctr.cycles
@@ -140,7 +152,8 @@ def pim_polymul_real(a: np.ndarray, b: np.ndarray, cfg: PIMConfig,
         total.gates += (c0.gates + c1.gates + sim.ctr.gates
                         + inv.counters.gates)
     if B % 2:
-        res = pim_polymul_real(a[-1], b[-1], cfg, spec)
+        res = pim_polymul_real(a[-1], b[-1], cfg, spec,
+                               faults=faults, array_id=array_id)
         out[-1] = res.output
         total.cycles += res.counters.cycles
         total.gates += res.counters.gates

@@ -3,6 +3,14 @@
 Design (1000+ node posture, DESIGN.md §6):
   * atomic step directories: write to ``step_N.tmp`` then rename — a crash
     mid-write never corrupts the latest checkpoint;
+  * durable, ordered writes: every file lands via temp-file + flush +
+    ``os.fsync`` + ``os.replace`` and the manifest is written LAST, so a
+    manifest that exists implies its arrays are already durable; the
+    containing directory is fsynced after each rename so the entries
+    themselves survive power loss;
+  * checked reads: a truncated or partial manifest (torn write, disk
+    full) raises :class:`CheckpointCorruptError` by name instead of a
+    bare ``JSONDecodeError`` deep in restore;
   * every array is saved with a manifest (tree paths, shapes, dtypes) and
     the data as host-local .npz shards; restore re-shards onto WHATEVER mesh
     is bound at restore time (elastic re-scaling: checkpoints taken on N
@@ -24,6 +32,50 @@ import jax
 import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file exists but cannot be trusted: truncated or
+    malformed manifest, or a manifest missing its required keys. Raised
+    by name so callers can distinguish "this snapshot is damaged" (fall
+    back to an older step, or refuse to resume) from "no snapshot"
+    (FileNotFoundError)."""
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _durable_replace(part: str, dest: str) -> None:
+    """Atomically publish ``part`` as ``dest`` and make both the data and
+    the directory entry durable (fsync file, rename, fsync dir)."""
+    os.replace(part, dest)
+    _fsync_dir(os.path.dirname(dest))
+
+
+def _load_manifest(final: str) -> dict:
+    """Read + validate one step's manifest; truncated/partial manifests
+    (torn write mid-crash) surface as :class:`CheckpointCorruptError`."""
+    path = os.path.join(final, "manifest.json")
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+        manifest = json.loads(raw.decode("utf-8"))
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"{path} is truncated or malformed ({e}); the step cannot be "
+            f"trusted — fall back to an older step or delete it") from e
+    if not isinstance(manifest, dict) or "arrays" not in manifest \
+            or "step" not in manifest:
+        raise CheckpointCorruptError(
+            f"{path} parsed but is missing required keys "
+            f"('step', 'arrays'): partial manifest from an interrupted "
+            f"save — fall back to an older step or delete it")
+    return manifest
 
 
 def _flatten_with_paths(tree: Any):
@@ -58,9 +110,21 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
                                    "shape": list(arr.shape),
                                    "dtype": str(arr.dtype)})
         arrays[name] = arr
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+    # Arrays first, manifest LAST, every file fsynced before its rename:
+    # a manifest that exists implies its arrays are already durable, so
+    # readers never see a step whose data lags its metadata.
+    npz_part = os.path.join(tmp, "arrays.npz.part")
+    with open(npz_part, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    _durable_replace(npz_part, os.path.join(tmp, "arrays.npz"))
+    man_part = os.path.join(tmp, "manifest.json.part")
+    with open(man_part, "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _durable_replace(man_part, os.path.join(tmp, "manifest.json"))
     if os.path.exists(final):
         # Re-saving an existing step must land the FRESH arrays. os.replace
         # cannot atomically replace a non-empty directory, so the old step
@@ -76,6 +140,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
         shutil.rmtree(old, ignore_errors=True)
     else:
         os.replace(tmp, final)
+    _fsync_dir(ckpt_dir)    # the step_N entry itself survives power loss
     _retain(ckpt_dir, keep)
     return final
 
@@ -110,10 +175,12 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 def read_manifest(ckpt_dir: str, step: int) -> dict:
     """The saved manifest (tree paths/shapes/dtypes + the ``extra`` payload
     callers stash host-side state in: watchdog EWMA/events, data-pipeline
-    step cursor, engine bucket config — docs/fault_tolerance.md)."""
+    step cursor, engine bucket config — docs/fault_tolerance.md).
+
+    Raises :class:`CheckpointCorruptError` for a truncated or partial
+    manifest rather than handing the caller half a JSON document."""
     final = os.path.join(ckpt_dir, f"step_{step}")
-    with open(os.path.join(final, "manifest.json")) as f:
-        return json.load(f)
+    return _load_manifest(final)
 
 
 def read_extra(ckpt_dir: str, step: int) -> dict:
@@ -126,8 +193,7 @@ def restore(ckpt_dir: str, step: int, like: Any,
     arrays are device_put with those shardings (elastic re-shard: the saved
     mesh size is irrelevant — data is stored unsharded per tree leaf)."""
     final = os.path.join(ckpt_dir, f"step_{step}")
-    with open(os.path.join(final, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = _load_manifest(final)
     data = np.load(os.path.join(final, "arrays.npz"))
     by_key = {e["key"]: data[e["name"]] for e in manifest["arrays"]}
     leaves, treedef = _flatten_with_paths(like)

@@ -42,6 +42,19 @@ latency record and the watchdog's timing baseline carry over. A
 :class:`~repro.ft.watchdog.StepWatchdog` observes per-batch service times;
 its ``on_evict`` hook is the elastic trigger the watchdog module
 documents (checkpoint -> resize -> restore).
+
+Integrity (``verified=True``): every deliverable batch passes its op's
+ABFT check (``ft/abft.py``) before any client sees a result. A failed
+check triggers bounded re-execution with exponential backoff; when the
+retry budget is exhausted the bucket's circuit breaker trips — it
+re-binds on a ``pim_ok=False`` context (cost model plans the PIM backend
+as infeasible), the simulated crossbar array behind it is quarantined to
+a spare, and the batch re-runs on the clean route. ``--inject-faults``
+chaos testing drives this path deterministically via a seeded
+:class:`~repro.core.pim.FaultModel` whose per-bucket injectors corrupt
+delivered rows. Per-request deadlines (``submit(..., deadline_s=...)``)
+complete expired requests with a structured timeout error instead of a
+result; expired requests never enter the latency record.
 """
 from __future__ import annotations
 
@@ -84,6 +97,9 @@ class _Request:
     key: tuple[str, int]
     payload: Any
     t_submit: float
+    # absolute perf_counter() deadline; expired requests complete with a
+    # structured error instead of a result (and never batch)
+    deadline: float | None = None
 
 
 @dataclasses.dataclass
@@ -95,6 +111,69 @@ class _BucketStats:
     # batches: the OBSERVED side of the cost model's predicted-vs-observed
     # comparison (docs/planner.md)
     service_s: float = 0.0
+    # deadline-expired requests swept from this bucket's queue
+    expired: int = 0
+    # ABFT ledger (verified=True): checks run / failures detected /
+    # re-executions / breaker trips (detected -> retried -> fell_back is
+    # the recovery state machine in docs/fault_tolerance.md)
+    checked: int = 0
+    corrupted: int = 0
+    retried: int = 0
+    fell_back: int = 0
+
+
+class _FaultInjector:
+    """Chaos hook for one serve bucket: wraps the bucket's bound ``fn``,
+    runs the real kernel, then — driven by the engine's seeded
+    :class:`~repro.core.pim.FaultModel` for this bucket's virtual array —
+    corrupts delivered rows. Deterministic per (model seed, array id,
+    dispatch index), so a chaos run replays exactly.
+
+    Corruption mirrors the sim-level fault modes at the result surface:
+    permanent faults (dead / stuck cells) corrupt EVERY dispatch, transient
+    bit-flips fire with probability ``1 - (1 - rate)^gates`` where gates
+    scales with the batch's work (rows * n * log2 n). Injected damage is a
+    magnitude change (float/complex) or a low-bit flip (modular) on one
+    element — exactly the class of error the ABFT checks are sound
+    against."""
+
+    def __init__(self, model, array_id: int, bound):
+        self.model = model
+        self.array_id = array_id
+        self.bound = bound
+        self.inner = bound.fn
+        self.dispatches = 0
+
+    def __call__(self, *operands):
+        out = self.inner(*operands)
+        idx = self.dispatches
+        self.dispatches += 1
+        faults = self.model.for_array(self.array_id)
+        if faults is None:
+            return out      # quarantined-to-spare or clean array
+        arr = np.array(self.bound.to_numpy(out), copy=True)
+        rows = arr if arr.ndim > 1 else arr.reshape(1, -1)
+        rng = self.model.rng_for(self.array_id, salt=1000 + idx)
+        if faults.permanent:
+            corrupt = True
+        else:
+            n = rows.shape[1]
+            gates = rows.shape[0] * n * max(1, n.bit_length() - 1)
+            p = 1.0 - (1.0 - faults.bitflip_per_gate) ** gates
+            corrupt = bool(rng.random() < p)
+        if corrupt:
+            r = int(rng.integers(rows.shape[0]))
+            j = int(rng.integers(rows.shape[1]))
+            row = rows[r]
+            if row.dtype == object:
+                row[j] = row[j] + 1
+            elif np.issubdtype(row.dtype, np.complexfloating):
+                row[j] += (1.0 + float(np.abs(row).max())) * (3.0 + 3.0j)
+            elif np.issubdtype(row.dtype, np.floating):
+                row[j] += (1.0 + float(np.abs(row).max())) * 3.0
+            else:
+                row[j] = row.dtype.type(int(row[j]) ^ 1)
+        return arr
 
 
 class ServeEngine:
@@ -114,11 +193,21 @@ class ServeEngine:
                  collect_timeout_s: float = 0.05,
                  watchdog_cfg: Optional[WatchdogConfig] = None,
                  on_evict: Optional[Callable[["ServeEngine", int], None]]
-                 = None):
+                 = None,
+                 verified: bool = False,
+                 fault_model=None,
+                 retry_cap: int = 2,
+                 retry_backoff_s: float = 0.001):
         if max_batch < 1:
             raise ValueError(f"max_batch={max_batch} must be >= 1")
         if max_pending < 1:
             raise ValueError(f"max_pending={max_pending} must be >= 1")
+        if retry_cap < 0:
+            raise ValueError(f"retry_cap={retry_cap} must be >= 0")
+        if fault_model is not None and not verified:
+            raise ValueError(
+                "fault_model without verified=True would deliver corrupted "
+                "results: chaos injection requires the ABFT gate")
         self.max_batch = max_batch
         self.max_pending = max_pending
         self.collect_timeout_s = collect_timeout_s
@@ -126,7 +215,20 @@ class ServeEngine:
         # and packing (plan(workload=...)); explicit-knob binding otherwise.
         self.ctx = op_registry.OpContext(modulus_bits=modulus_bits,
                                          model_shards=model_shards,
-                                         auto=auto)
+                                         auto=auto, verified=verified)
+        # ABFT recovery knobs (docs/fault_tolerance.md): detected
+        # corruption -> up to retry_cap re-executions with exponential
+        # backoff -> circuit breaker (XLA re-bind + array quarantine).
+        self.verified = verified
+        self.fault_model = fault_model
+        self.retry_cap = retry_cap
+        self.retry_backoff_s = retry_backoff_s
+        self._injectors: dict[tuple[str, int], _FaultInjector] = {}
+        self._breaker_open: set[tuple[str, int]] = set()
+        self._next_array_id = 0
+        # rid -> structured error for requests completed WITHOUT a result
+        # (deadline_exceeded today); disjoint from ``results``.
+        self.errors: dict[int, dict] = {}
         self._bound: dict[tuple[str, int], op_registry.BoundOp] = {}
         self._strict: dict[tuple[str, int], bool] = {}
         self._bucket_stats: dict[tuple[str, int], _BucketStats] = {}
@@ -177,6 +279,14 @@ class ServeEngine:
                 spec = op_registry.get_op(op)
                 bound = spec.bind(n, self.ctx, batch=self.max_batch,
                                   strict=strict)
+                if self.fault_model is not None:
+                    # one virtual crossbar array per bucket, assigned
+                    # round-robin over the model's array space
+                    aid = self._next_array_id % self.fault_model.n_arrays
+                    self._next_array_id += 1
+                    inj = _FaultInjector(self.fault_model, aid, bound)
+                    bound.fn = inj
+                    self._injectors[key] = inj
                 self._bound[key] = bound
                 self._strict[key] = strict
                 self._buckets[key] = deque()
@@ -195,17 +305,26 @@ class ServeEngine:
     # -- admission ----------------------------------------------------------
 
     def submit(self, op: str, n: int, payload, *, rid: int | None = None,
-               block: bool = True, timeout: float | None = None) -> int:
+               block: bool = True, timeout: float | None = None,
+               deadline_s: float | None = None) -> int:
         """Enqueue one request; returns its rid.
 
         Blocks while the bounded queue is full (``block=False`` raises
         :class:`Backpressure` instead — the caller's cue to shed load).
+        ``timeout`` bounds THIS call's wait for queue space;
+        ``deadline_s`` bounds the REQUEST's total time-to-result: a
+        request still queued past its deadline is completed with a
+        structured ``deadline_exceeded`` error (``engine.errors[rid]``)
+        instead of a result, and is excluded from the latency record.
         """
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s={deadline_s} must be > 0")
         if self._stopping:
             raise EngineStopped(
                 "engine is draining (request_stop/SIGTERM); submit after "
                 "the warm restart")
         bound = self.register(op, n)     # validates shape/route once
+        bound.check_payload(payload)     # reject NaN/Inf BEFORE it batches
         deadline = None if timeout is None else time.perf_counter() + timeout
         with self._cv:
             while self._pending >= self.max_pending:
@@ -227,13 +346,43 @@ class ServeEngine:
             if rid is None:
                 rid = self._next_rid
             self._next_rid = max(self._next_rid, rid + 1)
+            now = time.perf_counter()
             self._buckets[bound.key].append(
-                _Request(rid, bound.key, payload, time.perf_counter()))
+                _Request(rid, bound.key, payload, now,
+                         deadline=(None if deadline_s is None
+                                   else now + deadline_s)))
             self._pending += 1
             self._cv.notify_all()
         return rid
 
     # -- scheduling ---------------------------------------------------------
+
+    def _sweep_expired_locked(self) -> None:
+        """Complete deadline-expired queued requests with a structured
+        error (caller holds ``_cv``). Expired requests count as served —
+        they are COMPLETED, just without a result — so ``run`` terminates;
+        they never enter the latency record, so p99 describes delivered
+        results only."""
+        now = time.perf_counter()
+        for key, q in self._buckets.items():
+            if not any(r.deadline is not None and r.deadline < now
+                       for r in q):
+                continue
+            keep: deque[_Request] = deque()
+            for r in q:
+                if r.deadline is not None and r.deadline < now:
+                    self.errors[r.rid] = {
+                        "error": "deadline_exceeded",
+                        "op": key[0], "n": key[1],
+                        "waited_s": now - r.t_submit,
+                    }
+                    self._bucket_stats[key].expired += 1
+                    self._pending -= 1
+                    self._served += 1
+                else:
+                    keep.append(r)
+            self._buckets[key] = keep
+        self._cv.notify_all()
 
     def _pop_batch(self, timeout: float) -> tuple[tuple[str, int],
                                                   list[_Request]] | None:
@@ -242,6 +391,7 @@ class ServeEngine:
         with self._cv:
             if not any(self._buckets.values()):
                 self._cv.wait(timeout)
+            self._sweep_expired_locked()
             ready = [(q[0].t_submit, key)
                      for key, q in self._buckets.items() if q]
             if not ready:
@@ -259,10 +409,73 @@ class ServeEngine:
         routes); the sync happens later in ``_resolve``."""
         return self._bound[key].execute([r.payload for r in reqs])
 
+    def _verified_rows(self, key: tuple[str, int], reqs: list[_Request],
+                       arr: np.ndarray) -> np.ndarray:
+        """ABFT gate for one deliverable batch: check, then on detected
+        corruption re-execute up to ``retry_cap`` times with exponential
+        backoff; exhausted retries trip the bucket's circuit breaker
+        (XLA re-bind + array quarantine) and re-run once on the clean
+        route. Raises RuntimeError only if even the fallback route fails
+        its check — no corrupted batch is ever delivered."""
+        bound = self._bound[key]
+        payloads = [r.payload for r in reqs]
+        bs = self._bucket_stats[key]
+        verdict = bound.integrity(payloads, arr)
+        bs.checked += 1
+        if verdict.ok:
+            return arr
+        bs.corrupted += 1
+        for attempt in range(self.retry_cap):
+            time.sleep(self.retry_backoff_s * (2 ** attempt))
+            bs.retried += 1
+            arr = bound.to_numpy(bound.execute(payloads))
+            verdict = bound.integrity(payloads, arr)
+            bs.checked += 1
+            if verdict.ok:
+                return arr
+            bs.corrupted += 1
+        bs.fell_back += 1
+        bound = self._trip_breaker(key)
+        arr = bound.to_numpy(bound.execute(payloads))
+        verdict = bound.integrity(payloads, arr)
+        bs.checked += 1
+        if not verdict.ok:
+            bs.corrupted += 1
+            raise RuntimeError(
+                f"integrity check still failing after circuit-breaker "
+                f"fallback for {key[0]}/n={key[1]}: "
+                f"{verdict.detail or verdict.check}")
+        return arr
+
+    def _trip_breaker(self, key: tuple[str, int]):
+        """Open the bucket's circuit breaker: re-bind on a ``pim_ok=
+        False`` context (the cost model marks the PIM backend infeasible
+        for this bucket from now on) and quarantine the bucket's
+        simulated array to a spare. The new bound is CLEAN — no fault
+        injector wraps it."""
+        op, n = key
+        with self._bind_lock:
+            ctx = dataclasses.replace(self.ctx, pim_ok=False)
+            spec = op_registry.get_op(op)
+            bound = spec.bind(n, ctx, batch=self.max_batch,
+                              strict=self._strict[key])
+            self._bound[key] = bound
+            self._breaker_open.add(key)
+            inj = self._injectors.pop(key, None)
+            if inj is not None and self.fault_model is not None:
+                from repro.core.pim.faults import SparesExhausted
+                try:
+                    self.fault_model.quarantine(inj.array_id)
+                except SparesExhausted:
+                    pass    # breaker still isolates the bucket via re-bind
+        return bound
+
     def _resolve(self, key: tuple[str, int], reqs: list[_Request],
                  out) -> None:
         """Materialize a dispatched batch: record results + latencies."""
         arr = self._bound[key].to_numpy(out)
+        if self.verified:
+            arr = self._verified_rows(key, reqs, arr)
         t_done = time.perf_counter()
         assert arr.shape[0] == len(reqs), \
             f"batch executed at {arr.shape[0]} rows for {len(reqs)} requests"
@@ -377,6 +590,16 @@ class ServeEngine:
                 # materialized, batch time amortized over its rows)
                 "observed_s_per_req": (bs.service_s / bs.served
                                        if bs.served else None),
+                "expired": bs.expired,
+                # ABFT ledger (all zeros when verified=False): the
+                # detected -> retried -> fell_back recovery trajectory
+                "integrity": {
+                    "checked": bs.checked,
+                    "corrupted": bs.corrupted,
+                    "retried": bs.retried,
+                    "fell_back": bs.fell_back,
+                    "breaker_open": key in self._breaker_open,
+                },
             }
             cost = getattr(bound.plan, "cost", None)
             if cost is not None and cost.get("best") is not None:
@@ -391,6 +614,9 @@ class ServeEngine:
         return {
             "served": self._served,
             "batches": batches,
+            # requests completed with a deadline_exceeded error (included
+            # in ``served`` — they are finished — but never in latency_ms)
+            "expired": sum(b.expired for b in self._bucket_stats.values()),
             "seconds": seconds,
             "throughput_per_s": self._served / max(seconds, 1e-9),
             # busy-only rate: excludes queue-collection waits, so endpoint
@@ -443,7 +669,8 @@ class ServeEngine:
                        "collect_timeout_s": self.collect_timeout_s,
                        "modulus_bits": self.ctx.modulus_bits,
                        "model_shards": self.ctx.model_shards,
-                       "auto": self.ctx.auto},
+                       "auto": self.ctx.auto,
+                       "verified": self.verified},
             "buckets": [{"op": op, "n": n, "strict": self._strict[(op, n)]}
                         for op, n in self._bound],
             "counters": {
@@ -497,6 +724,7 @@ class ServeEngine:
             model_shards=(eng_cfg["model_shards"] if model_shards is None
                           else model_shards),
             auto=bool(eng_cfg.get("auto", False)),
+            verified=bool(eng_cfg.get("verified", False)),
             watchdog_cfg=watchdog_cfg, on_evict=on_evict)
         for b in extra["buckets"]:
             engine.register(b["op"], int(b["n"]), strict=bool(b["strict"]))

@@ -60,10 +60,21 @@ class OpContext:
     ``plan(n, batch, workload=<op name>, ...)`` for the predicted-cheapest
     executable route. Strict knob validation is unchanged — knobs an op
     cannot consume are still rejected, auto only picks among routes the
-    op really has."""
+    op really has.
+
+    ``verified=True`` binds the route with ABFT integrity pricing
+    (docs/fault_tolerance.md): auto plans carry the check overhead in
+    their cost breakdown, and the RNS route proves its modulus is
+    checkable (factors over the limb primes) at bind time. ``pim_ok=
+    False`` is the circuit-breaker context: the cost model plans with
+    the PIM backend marked infeasible, the re-bind a serve bucket gets
+    after its (simulated) crossbar array is quarantined. Both apply to
+    every op, so ``narrow`` preserves them."""
     modulus_bits: int | None = None
     model_shards: int = 1
     auto: bool = False
+    verified: bool = False
+    pim_ok: bool = True
 
 
 @dataclasses.dataclass
@@ -126,6 +137,31 @@ class BoundOp:
     def verify(self, payload, result: np.ndarray) -> None:
         self.spec.verify(self, payload, result)
 
+    def check_payload(self, payload) -> None:
+        """Admission guard: reject non-finite float/complex operands with
+        a structured :class:`OpConfigError` BEFORE they join a batch — a
+        NaN poisons every row it batches with, and once ABFT is on it
+        would masquerade as an integrity failure and burn the retry
+        budget on a client bug."""
+        operands = (payload,) if self.spec.arity == 1 else tuple(payload)
+        for i, op in enumerate(operands):
+            arr = np.asarray(op)
+            if arr.dtype == object or not np.issubdtype(arr.dtype,
+                                                        np.inexact):
+                continue            # big ints / residues: no NaN to carry
+            if not np.isfinite(arr).all():
+                raise OpConfigError(
+                    f"op {self.spec.name!r}: operand {i} contains "
+                    f"non-finite values (NaN/Inf) — rejected at submit "
+                    f"(it would poison the whole batch)")
+
+    def integrity(self, payloads: Sequence[Any],
+                  rows: np.ndarray):
+        """Run the op's ABFT check on one DELIVERABLE batch: the stacked
+        result rows against the request payloads (ft/abft.py). Returns
+        an ``IntegrityVerdict``."""
+        return self.spec.integrity(self, payloads, rows)
+
 
 @dataclasses.dataclass(frozen=True)
 class OpSpec:
@@ -140,6 +176,11 @@ class OpSpec:
     warmup_payload: Callable[[BoundOp, int], tuple]
     random_payload: Callable[[BoundOp, np.random.Generator], Any]
     verify: Callable[[BoundOp, Any, np.ndarray], None]
+    #: batch-level ABFT check (ft/abft.py): ``integrity(bound, payloads,
+    #: rows) -> IntegrityVerdict`` validating a whole result batch
+    #: against its request payloads in O(n) per row — the gate the
+    #: verified serve engine runs before delivering any result.
+    integrity: Callable[[BoundOp, Sequence[Any], np.ndarray], Any] = None
 
     def validate(self, n: int, ctx: OpContext = OpContext()) -> None:
         """Raise :class:`OpConfigError` unless (n, ctx) is serveable."""
@@ -161,7 +202,7 @@ class OpSpec:
         return OpContext(
             modulus_bits=ctx.modulus_bits if self.uses_modulus_bits else None,
             model_shards=ctx.model_shards if self.uses_model_shards else 1,
-            auto=ctx.auto)
+            auto=ctx.auto, verified=ctx.verified, pim_ok=ctx.pim_ok)
 
     def bind(self, n: int, ctx: OpContext = OpContext(), *,
              batch: int = 0, strict: bool = True) -> BoundOp:
@@ -261,6 +302,50 @@ def _circular_complex(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return np.fft.ifft(np.fft.fft(a) * np.fft.fft(b))
 
 
+def _stack_operands(bound: BoundOp,
+                    payloads: Sequence[Any]) -> tuple[np.ndarray, ...]:
+    """Host-side numpy stacking for the integrity checks (mirrors
+    ``BoundOp.stack`` without the device transfer)."""
+    if bound.spec.arity == 1:
+        return (np.stack([np.asarray(p, bound.payload_dtype)
+                          for p in payloads]),)
+    return tuple(
+        np.stack([np.asarray(p[i], bound.payload_dtype) for p in payloads])
+        for i in range(bound.spec.arity))
+
+
+def _integrity_fft(bound: BoundOp, payloads, rows):
+    from repro.ft import abft
+    (x,) = _stack_operands(bound, payloads)
+    return abft.check_fft(x, rows)
+
+
+def _integrity_rfft(bound: BoundOp, payloads, rows):
+    from repro.ft import abft
+    (x,) = _stack_operands(bound, payloads)
+    return abft.check_rfft(x, rows)
+
+
+def _integrity_polymul(bound: BoundOp, payloads, rows):
+    from repro.ft import abft
+    a, b = _stack_operands(bound, payloads)
+    return abft.check_polymul(a, b, rows)
+
+
+def _integrity_polymul_real(bound: BoundOp, payloads, rows):
+    from repro.ft import abft
+    a, b = _stack_operands(bound, payloads)
+    return abft.check_polymul_real(a, b, rows)
+
+
+def _integrity_polymul_mod(bound: BoundOp, payloads, rows):
+    from repro.ft import abft
+    a, b = _stack_operands(bound, payloads)
+    if bound.rns is not None:
+        return abft.check_polymul_rns(a, b, rows, bound.rns)
+    return abft.check_polymul_mod(a, b, rows, bound.ntt_params)
+
+
 def _no_dist_route(spec: OpSpec, n: int, ctx: OpContext) -> None:
     pass
 
@@ -283,7 +368,9 @@ def _bind_fft(spec: OpSpec, n: int, ctx: OpContext, batch: int) -> BoundOp:
     import jax
     from repro.core import fft as fft_core
     if ctx.auto:
-        plan = _plan_or_config_error(n=n, batch=batch, workload="fft")
+        plan = _plan_or_config_error(n=n, batch=batch, workload="fft",
+                                     verified=ctx.verified,
+                                     pim_ok=ctx.pim_ok)
     else:
         plan = _plan_or_config_error(n=n, batch=batch)
     return BoundOp(spec=spec, n=n, ctx=ctx, plan=plan, route="fft",
@@ -299,6 +386,7 @@ register_op(
     warmup_payload=_zeros,
     random_payload=lambda b, rng: _cnormal(rng, b.n),
     verify=functools.partial(_float_verify, np.fft.fft, 1e-3),
+    integrity=_integrity_fft,
 )
 
 
@@ -311,7 +399,9 @@ def _bind_rfft(spec: OpSpec, n: int, ctx: OpContext, batch: int) -> BoundOp:
     import jax.numpy as jnp
     from repro.core import fft as fft_core
     if ctx.auto:
-        plan = _plan_or_config_error(n=n, batch=batch, workload="rfft")
+        plan = _plan_or_config_error(n=n, batch=batch, workload="rfft",
+                                     verified=ctx.verified,
+                                     pim_ok=ctx.pim_ok)
         if not plan.real:
             # Cost model preferred complex packing (only reachable where
             # the real route is pruned): cast up, full transform, keep
@@ -336,6 +426,7 @@ register_op(
     warmup_payload=_zeros,
     random_payload=lambda b, rng: rng.standard_normal(b.n).astype(np.float32),
     verify=functools.partial(_float_verify, np.fft.rfft, 1e-3),
+    integrity=_integrity_rfft,
 )
 
 
@@ -348,7 +439,9 @@ def _bind_polymul(spec: OpSpec, n: int, ctx: OpContext, batch: int) -> BoundOp:
     import jax.numpy as jnp
     from repro.core import fft as fft_core
     if ctx.auto:
-        plan = _plan_or_config_error(n=n, batch=batch, workload="polymul")
+        plan = _plan_or_config_error(n=n, batch=batch, workload="polymul",
+                                     verified=ctx.verified,
+                                     pim_ok=ctx.pim_ok)
     else:
         plan = _plan_or_config_error(n=n, batch=batch)
     return BoundOp(
@@ -367,6 +460,7 @@ register_op(
     warmup_payload=_zeros,
     random_payload=lambda b, rng: (_cnormal(rng, b.n), _cnormal(rng, b.n)),
     verify=functools.partial(_float_verify, _circular_complex, 1e-3),
+    integrity=_integrity_polymul,
 )
 
 
@@ -382,7 +476,8 @@ def _validate_polymul_real(spec: OpSpec, n: int, ctx: OpContext) -> None:
         # candidate at all is executable (the planner's pruned-list
         # error names each constraint).
         _plan_or_config_error(n=n, batch=0, workload="polymul-real",
-                              model_shards=ctx.model_shards)
+                              model_shards=ctx.model_shards,
+                              verified=ctx.verified, pim_ok=ctx.pim_ok)
     elif ctx.model_shards > 1:
         _plan_or_config_error(n=n, batch=0, real=True,
                               model_shards=ctx.model_shards,
@@ -397,7 +492,9 @@ def _bind_polymul_real(spec: OpSpec, n: int, ctx: OpContext,
     if ctx.auto:
         plan = _plan_or_config_error(n=n, batch=batch,
                                      workload="polymul-real",
-                                     model_shards=ctx.model_shards)
+                                     model_shards=ctx.model_shards,
+                                     verified=ctx.verified,
+                                     pim_ok=ctx.pim_ok)
     elif ctx.model_shards > 1:
         plan = _plan_or_config_error(n=n, batch=batch, real=True,
                                      model_shards=ctx.model_shards,
@@ -441,6 +538,7 @@ register_op(
         rng.standard_normal(b.n).astype(np.float32),
         rng.standard_normal(b.n).astype(np.float32)),
     verify=functools.partial(_float_verify, _circular_real, 1e-3),
+    integrity=_integrity_polymul_real,
 )
 
 
@@ -462,7 +560,8 @@ def _validate_polymul_mod(spec: OpSpec, n: int, ctx: OpContext) -> None:
         # local tier for multi-limb moduli.
         shards = 1 if (bits is not None and bits > 30) else ctx.model_shards
         _plan_or_config_error(n=n, batch=0, workload="polymul-mod",
-                              model_shards=shards)
+                              model_shards=shards,
+                              verified=ctx.verified, pim_ok=ctx.pim_ok)
     elif ctx.model_shards > 1:
         _plan_or_config_error(n=n, batch=0, exact=True,
                               model_shards=ctx.model_shards,
@@ -486,7 +585,8 @@ def _bind_polymul_mod(spec: OpSpec, n: int, ctx: OpContext,
     if ctx.auto:
         plan = _plan_or_config_error(
             n=n, batch=batch, workload="polymul-mod",
-            model_shards=1 if rns_route else ctx.model_shards)
+            model_shards=1 if rns_route else ctx.model_shards,
+            verified=ctx.verified, pim_ok=ctx.pim_ok)
     elif ctx.model_shards > 1:
         plan = _plan_or_config_error(n=n, batch=batch, exact=True,
                                      model_shards=ctx.model_shards,
@@ -507,6 +607,17 @@ def _bind_polymul_mod(spec: OpSpec, n: int, ctx: OpContext,
     if bits is not None and bits > 30:
         from repro.core.ntt import RNSParams, rns_polymul
         rns = RNSParams.make(n, modulus_bits=bits)
+        if ctx.verified:
+            # A verified bind must be CHECKABLE: the per-factor
+            # eval-at-psi check needs Q to factor over the limb primes.
+            # Prove it here, not on the first served batch.
+            from repro.ft import abft
+            try:
+                abft.check_limbs_for(rns)
+            except abft.ABFTUnsupportedModulus as e:
+                raise OpConfigError(
+                    f"verified polymul-mod (RNS) bind rejected: {e}"
+                ) from e
         return BoundOp(spec=spec, n=n, ctx=ctx, plan=plan,
                        route="polymul-mod-rns",
                        fn=functools.partial(rns_polymul, rns=rns),
@@ -554,4 +665,5 @@ register_op(
     warmup_payload=_zeros,
     random_payload=_random_mod_payload,
     verify=_verify_mod,
+    integrity=_integrity_polymul_mod,
 )

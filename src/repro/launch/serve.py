@@ -214,6 +214,17 @@ def run_engine_service(args) -> dict:
     from repro.ft import checkpoint as ckpt_lib
     from repro.launch.engine import EngineStopped
 
+    # chaos fault model (docs/fault_tolerance.md): one virtual crossbar
+    # array per bucket plus enough spares to quarantine every one of them
+    fault_model = None
+    if args.inject_faults or args.inject_stuck:
+        from repro.core.pim import FaultModel
+        n_buckets = max(4, len(ops) * len(ns))
+        fault_model = FaultModel(seed=args.inject_fault_seed,
+                                 bitflip_per_gate=args.inject_faults,
+                                 stuck_per_array=args.inject_stuck,
+                                 n_arrays=n_buckets, spares=n_buckets)
+
     holder: dict = {"engine": None, "evicted": False}
 
     def _on_evict(eng, batch_idx):
@@ -244,6 +255,8 @@ def run_engine_service(args) -> dict:
                              modulus_bits=args.modulus_bits,
                              model_shards=args.model_shards,
                              auto=args.auto,
+                             verified=args.verify,
+                             fault_model=fault_model,
                              watchdog_cfg=wd_cfg,
                              on_evict=_on_evict)
     holder["engine"] = engine
@@ -275,6 +288,9 @@ def run_engine_service(args) -> dict:
         _arm_chaos(engine, args)
         engine.warmup()
         kept: dict[tuple[str, int], tuple[int, object]] = {}
+        # chaos runs verify EVERY delivered result against the numpy
+        # oracle — the "zero incorrect results" half of the chaos pin
+        kept_all: dict[int, tuple[str, int, object]] = {}
 
         def producer():
             try:
@@ -284,6 +300,8 @@ def run_engine_service(args) -> dict:
                     rid = engine.submit(op, n, payload)
                     if (op, n) not in kept:
                         kept[(op, n)] = (rid, payload)
+                    if fault_model is not None:
+                        kept_all[rid] = (op, n, payload)
             except EngineStopped:
                 pass  # draining toward a snapshot: shed the rest
 
@@ -296,6 +314,9 @@ def run_engine_service(args) -> dict:
         th.join()
         for (op, n), (rid, payload) in kept.items():
             if rid in engine.results:   # absent only if shed in a drain
+                engine.bound(op, n).verify(payload, engine.results[rid])
+        for rid, (op, n, payload) in kept_all.items():
+            if rid in engine.results:
                 engine.bound(op, n).verify(payload, engine.results[rid])
         return stats
 
@@ -315,6 +336,20 @@ def run_engine_service(args) -> dict:
                 holder["engine"] = engine
                 continue
             break
+        if fault_model is not None:
+            integ = [b["integrity"] for b in stats["buckets"].values()]
+            detected = sum(v["corrupted"] for v in integ)
+            retried = sum(v["retried"] for v in integ)
+            fell_back = sum(v["fell_back"] for v in integ)
+            print(f"[serve:engine] chaos: detected={detected} "
+                  f"retried={retried} fell_back={fell_back} "
+                  f"quarantined={len(fault_model.quarantined)}", flush=True)
+            if detected < 1 or retried < 1:
+                raise SystemExit(
+                    "chaos run produced no detected->retried event: the "
+                    "injection settings are not exercising the ABFT "
+                    "recovery path (raise --inject-faults or set "
+                    "--inject-stuck)")
         if args.snapshot_dir:
             path = engine.snapshot(args.snapshot_dir)
             print(f"[serve:engine] snapshot -> {path}")
@@ -440,6 +475,26 @@ def main(argv=None):
     ap.add_argument("--inject-straggler-after", type=int, default=0,
                     help="chaos: batches served cleanly before the "
                          "injected straggling starts")
+    ap.add_argument("--verify", action="store_true",
+                    help="engine service: ABFT integrity gate "
+                         "(docs/fault_tolerance.md) — every deliverable "
+                         "batch passes its op's check before any client "
+                         "sees a result; detected corruption triggers "
+                         "bounded re-execution, then a circuit-breaker "
+                         "re-bind with the PIM backend quarantined")
+    ap.add_argument("--inject-faults", type=float, default=0.0,
+                    metavar="RATE",
+                    help="chaos: per-gate transient bit-flip rate for a "
+                         "seeded fault model wrapping each engine bucket; "
+                         "delivered rows are corrupted deterministically "
+                         "per (seed, array, dispatch) (requires --verify)")
+    ap.add_argument("--inject-fault-seed", type=int, default=0,
+                    help="chaos: fault model seed (replays exactly)")
+    ap.add_argument("--inject-stuck", type=int, default=0,
+                    help="chaos: stuck-at cells per simulated array — a "
+                         "PERMANENT fault, so the bucket's retries fail "
+                         "and the circuit breaker must trip (requires "
+                         "--verify)")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -450,6 +505,10 @@ def main(argv=None):
     if args.elastic and not args.snapshot_dir:
         ap.error("--elastic requires --snapshot-dir (the eviction path "
                  "is snapshot -> resize -> restore)")
+    if (args.inject_faults or args.inject_stuck) and not args.verify:
+        ap.error("--inject-faults/--inject-stuck without --verify would "
+                 "deliver corrupted results: chaos injection requires "
+                 "the ABFT gate")
     try:
         if args.service == "fft":
             return run_fft_service(args)
