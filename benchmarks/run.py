@@ -378,6 +378,30 @@ DIST_REAL_COMPLEX_BYTE_GATE = 0.6
 ABFT_OVERHEAD_GATE = 0.25
 
 
+def static_analysis_smoke() -> dict:
+    """Invariant-linter gate + rule-count record (docs/static_analysis.md).
+
+    Runs ``repro.analysis`` over src/tests/benchmarks exactly like the CI
+    static-analysis job, and records the ACTIVE RULE COUNT as a
+    deterministic metric: ``benchmarks/trajectory.py`` ratchets it with
+    direction=max, so rules can be added but never silently dropped — the
+    linter's coverage is part of the perf trajectory's contract surface."""
+    from benchmarks.runlib import emit
+    from repro import analysis
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    res = analysis.analyze_paths(
+        [os.path.join(root, p) for p in ("src", "tests", "benchmarks")])
+    emit("smoke/static_analysis", 0.0,
+         f"rules={len(analysis.RULES)};findings={len(res.findings)}"
+         f";suppressed={len(res.suppressed)};files={res.n_files}")
+    return {"op": "static-analysis",
+            "rule_count": len(analysis.RULES),
+            "findings": len(res.findings),
+            "suppressed": len(res.suppressed),
+            "messages": [f.format() for f in res.findings]}
+
+
 def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
     """Emit the real-path perf record + gate; returns the written dict.
 
@@ -524,6 +548,14 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
     auto_record = auto_plan_agreement_smoke()
     records.append(auto_record)
 
+    # Invariant linter: zero findings over the tree, rule count ratcheted
+    # (a dropped rule is a silently-unenforced contract).
+    sa_record = static_analysis_smoke()
+    records.append(sa_record)
+    static_analysis = {"rule_count": sa_record["rule_count"],
+                       "findings": sa_record["findings"],
+                       "suppressed": sa_record["suppressed"]}
+
     # Evaluate every gate, record the honest verdicts, and only then
     # assert: the artifact must exist AND tell the truth on a failing run
     # (it is uploaded with if: always() in CI).
@@ -533,6 +565,7 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
              "dist_real_complex_byte_ratio": dist_ratios,
              "abft_overhead_ratio": abft_ratios,
              "auto_plan": auto_record,
+             "static_analysis": static_analysis,
              "records": records}
     violations = trajectory.compare(baseline, fresh) if baseline else []
     cycle_ok = all(r <= REAL_COMPLEX_CYCLE_GATE for r in ratios.values())
@@ -544,6 +577,7 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
     # gates above, so this only catches a grossly slower real path).
     wallclock_ok = us_real < 1.15 * us_cplx
     auto_ok = auto_record["agreement"] == 1.0
+    sa_ok = sa_record["findings"] == 0
     out = {
         "schema": "bench_fourier/v1",
         "device_model": "FOURIERPIM_8", "spec": "fp32",
@@ -552,6 +586,7 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
         "dist_real_complex_byte_ratio": dist_ratios,
         "abft_overhead_ratio": abft_ratios,
         "auto_plan": auto_record,
+        "static_analysis": static_analysis,
         "serve": {"p50_ms": serve_record["serve_p50_ms"],
                   "p99_ms": serve_record["serve_p99_ms"],
                   "throughput_per_s": serve_record["throughput_per_s"],
@@ -565,11 +600,12 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
                  "abft_overhead_pass": abft_ok,
                  "wallclock_pass": wallclock_ok,
                  "auto_plan_agreement_pass": auto_ok,
+                 "static_analysis_pass": sa_ok,
                  "ratchet_slack": trajectory.RATCHET_SLACK,
                  "trajectory_pass": not violations,
                  "trajectory_violations": violations,
                  "pass": (cycle_ok and bytes_ok and abft_ok
-                          and wallclock_ok and auto_ok
+                          and wallclock_ok and auto_ok and sa_ok
                           and not violations)},
     }
     out["history"] = trajectory.extend_history(baseline, out)
@@ -591,6 +627,9 @@ def bench_fourier_smoke(path: str = "BENCH_fourier.json") -> dict:
     assert auto_ok, \
         "auto planner predicted-best tier disagrees with the measured " \
         f"best on some grid point: {auto_record['points']}"
+    assert sa_ok, \
+        "invariant linter found contract violations:\n  " + \
+        "\n  ".join(sa_record["messages"])
     assert not violations, \
         "perf trajectory ratchet violated vs the committed " \
         f"BENCH_fourier.json baseline:\n  " + "\n  ".join(violations)

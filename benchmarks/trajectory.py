@@ -74,6 +74,13 @@ def deterministic_metrics(bench: dict) -> dict[str, tuple[float, str]]:
         # predicted-vs-measured tier agreement of the auto planner:
         # pinned at 1.0 — any drop is a cost-model rot, not noise.
         out["auto_plan_agreement"] = (float(ap["agreement"]), "max")
+    sa = bench.get("static_analysis") or {}
+    if "rule_count" in sa:
+        # active invariant-linter rules (repro.analysis): rules may be
+        # added but never silently dropped — with 2% slack, losing even
+        # one rule from a set of <= 50 trips the ratchet.
+        out["static_analysis_rule_count"] = (float(sa["rule_count"]),
+                                             "max")
     for rec in bench.get("records", []):
         op = rec.get("op")
         # closed-form PIM model outputs: deterministic per commit

@@ -1,0 +1,23 @@
+"""repro.analysis — AST-based invariant linter for this repo's contracts.
+
+Each rule encodes a bug class this repository actually shipped and fixed
+(docs/static_analysis.md has the full table); the CI ``static-analysis``
+job gates ``python -m repro.analysis src tests benchmarks`` at zero
+findings, so reintroducing any of those bugs fails the build with a
+message naming the rule and the original PR.
+
+Stdlib-only by design: importing this package must never pull in jax, so
+the linter runs in a bare environment before any heavy dependency
+installs, and linting cannot be broken by the code it lints.
+"""
+from repro.analysis.engine import (AnalysisResult, Finding, analyze_files,
+                                   analyze_paths, analyze_source,
+                                   iter_python_files, render, to_json,
+                                   to_text)
+from repro.analysis.rules import LAX_COLLECTIVES, OP_NAMES, RULE_IDS, RULES
+
+__all__ = [
+    "AnalysisResult", "Finding", "analyze_files", "analyze_paths",
+    "analyze_source", "iter_python_files", "render", "to_json", "to_text",
+    "LAX_COLLECTIVES", "OP_NAMES", "RULE_IDS", "RULES",
+]

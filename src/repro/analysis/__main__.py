@@ -1,0 +1,46 @@
+"""CLI: ``python -m repro.analysis <paths...> [--format text|json]``.
+
+Exit codes: 0 = clean, 1 = findings, 2 = usage error (missing path, no
+paths). CI runs the text form as the gate and the JSON form as an
+uploaded artifact (docs/static_analysis.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import engine
+from repro.analysis import rules as rules_mod
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST invariant linter encoding this repo's shipped-bug "
+                    "contracts (docs/static_analysis.md)")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories to scan (e.g. src tests "
+                         "benchmarks)")
+    ap.add_argument("--format", choices=("text", "json"), default="text",
+                    help="report format (default text)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit 0")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in rules_mod.RULES:
+            print(f"{rule.id:18s} [{rule.kind}] {rule.summary}")
+        print(f"{len(rules_mod.RULES)} rules")
+        return 0
+    if not args.paths:
+        ap.error("no paths given (e.g. src tests benchmarks)")
+    try:
+        result = engine.analyze_paths(args.paths)
+    except FileNotFoundError as e:
+        ap.error(f"path does not exist: {e.args[0]}")
+    print(engine.render(result, args.format))
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -201,6 +201,7 @@ def _xla_local_terms(workload: str, n: int, batch: int, *,
     """
     lg = n.bit_length() - 1
     fft_flops = 5.0 * n * lg
+    # repro: noqa[dispatch-ladder]: per-workload closed-form flop/byte FORMULAS (cost-model data, not op dispatch) — executable routes bind through the launch/ops.py registry
     if workload == "fft":
         flops = batch * fft_flops
         nbytes = batch * 2 * n * 8                      # c64 in + out
@@ -242,6 +243,7 @@ def _xla_collective_bytes(workload: str, n: int, batch: int,
         return four_step_collective_stats(
             n, batch, n_devices, op="polymul")["bytes"]
     from repro.core.fft.distributed import four_step_collective_stats
+    # repro: noqa[dispatch-ladder]: maps workload -> ledger closed-form key (byte-formula selection, not op dispatch); the registry is the only executable dispatch surface
     if workload == "rfft":
         op = "rfft" if real else "fft"
     elif workload == "polymul-real":

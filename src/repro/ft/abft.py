@@ -282,6 +282,7 @@ def _schedule(workload: str, n: int,
         s.append(("col", "modmul", min(m, rows), _serial_units(m, cfg)))
         reduce_tree(m, "modadd")
 
+    # repro: noqa[dispatch-ladder]: per-workload check-SCHEDULE construction (cost data, not op dispatch) — serving binds these checks through the launch/ops.py registry
     if workload == "fft":
         energy(n, True)                  # input energy
         energy(n, True)                  # output energy

@@ -114,14 +114,16 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
     # a manifest that exists implies its arrays are already durable, so
     # readers never see a step whose data lags its metadata.
     npz_part = os.path.join(tmp, "arrays.npz.part")
+    # repro: noqa[durable-write]: this IS the durable helper — .part file, fsync below, rename after
     with open(npz_part, "wb") as f:
-        np.savez(f, **arrays)
+        np.savez(f, **arrays)  # repro: noqa[durable-write]: into the fsynced .part file opened above
         f.flush()
         os.fsync(f.fileno())
     _durable_replace(npz_part, os.path.join(tmp, "arrays.npz"))
     man_part = os.path.join(tmp, "manifest.json.part")
+    # repro: noqa[durable-write]: this IS the durable helper — manifest lands LAST via _durable_replace
     with open(man_part, "w") as f:
-        json.dump(manifest, f)
+        json.dump(manifest, f)  # repro: noqa[durable-write]: into the fsynced .part file opened above
         f.flush()
         os.fsync(f.fileno())
     _durable_replace(man_part, os.path.join(tmp, "manifest.json"))
